@@ -1,0 +1,53 @@
+"""Fig. 5(b): average total queue length vs query rate, pi3 (solid) vs
+pi3bar (dashed), for C=2 and C=3 on the 4x4 grid.
+
+Reproduces the paper's two claims:
+  * both policies share the same capacity knee (the regulator costs ~nothing),
+  * the knee sits at lam*=8 for C=2 (computation-bound) and just below the
+    LP bound 10 for C=3 (communication-bound; paper reads ~9.8).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import PolicyConfig, capacity_upper_bound, paper_grid_problem
+from repro.sim import sweep_rates
+
+T = 2500
+LAMS = {2.0: [4.0, 5.0, 6.0, 6.5, 7.0, 7.5, 8.0, 8.5, 9.0],
+        3.0: [5.0, 6.0, 7.0, 8.0, 8.5, 9.0, 9.5, 10.0, 10.5]}
+
+
+def run(emit) -> dict:
+    out = {}
+    for C in (2.0, 3.0):
+        p = paper_grid_problem(C=C)
+        lam_star = capacity_upper_bound(p).lam_star
+        emit(f"# fig5b C={C}: LP lambda* = {lam_star:.3f}")
+        for name in ("pi3", "pi3bar"):
+            t0 = time.time()
+            res = sweep_rates(p, PolicyConfig(name=name, eps_b=0.01),
+                              LAMS[C], T=T, seed=7)
+            dt = time.time() - t0
+            avg_q = np.asarray(res.total_queue.mean(axis=1))
+            rate = np.asarray(res.delivered_useful[:, -1] -
+                              res.delivered_useful[:, T // 2]) / (T - T // 2)
+            us = dt / (len(LAMS[C]) * T) * 1e6
+            for lam, q, r in zip(LAMS[C], avg_q, rate):
+                emit(f"fig5b/C{C:g}/{name}/lam{lam:g},{us:.2f},"
+                     f"avg_queue={q:.1f};useful_rate={r:.3f}")
+            out[(C, name)] = (np.array(LAMS[C]), avg_q, rate)
+        # capacity knee check: queue explodes past lambda*
+        for name in ("pi3", "pi3bar"):
+            lams, q, r = out[(C, name)]
+            below = q[lams <= lam_star - 1.0]
+            above = q[lams >= lam_star + 0.4]
+            if len(above) and len(below):
+                assert above.min() > 1.5 * below.max(), (C, name)
+    return out
+
+
+if __name__ == "__main__":
+    run(print)

@@ -1,0 +1,41 @@
+"""Example: loss-free MoE load balancing via the paper's virtual queues.
+
+Trains two tiny granite-family MoE models on the same stream — one with the
+backpressure router (H-queue selection bias, paper eq. 9/10), one with plain
+top-k — and prints per-expert load balance over training.
+
+  PYTHONPATH=src python examples/moe_backpressure.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import RunConfig, ShapeConfig, get_config, reduced
+from repro.core.router import load_violation
+from repro.data import DataConfig, TokenStream
+from repro.runtime.step import init_train_state, make_train_step
+
+STEPS, B, S = 40, 8, 64
+
+for router in ("plain", "backpressure"):
+    cfg = dataclasses.replace(reduced(get_config("granite-moe-1b-a400m")),
+                              router=router)
+    rcfg = RunConfig(model=cfg, shape=ShapeConfig("ex", S, B, "train"),
+                     activ_dtype="float32", remat="none")
+    state, _ = init_train_state(rcfg, key=jax.random.key(0))
+    step = jax.jit(make_train_step(rcfg), donate_argnums=(0,))
+    data = TokenStream(DataConfig(vocab=cfg.vocab, seq_len=S, global_batch=B))
+    for i in range(STEPS):
+        state, metrics = step(state, {
+            "tokens": jnp.asarray(data.batch(i)["tokens"])})
+    # H tracks cumulative overflow per expert; its spread measures imbalance
+    H = np.asarray(state.router_H)
+    loss = float(metrics["loss"])
+    spread = H.max() - H.min() if H.size else 0.0
+    print(f"router={router:13s} loss={loss:.3f} "
+          f"H-spread={spread:10.1f} (lower = better balanced)")
+print("\nThe backpressure router keeps the virtual queues drained "
+      "(bounded H) with no auxiliary loss term — the paper's H_n dynamics "
+      "as loss-free expert balancing.")

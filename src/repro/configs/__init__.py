@@ -1,0 +1,34 @@
+"""Config registry: `get_config(arch_id)` and ARCHS listing."""
+from .base import ModelConfig, RunConfig, ShapeConfig, SHAPES, reduced
+
+from . import (gemma3_27b, olmo_1b, qwen15_32b, qwen2_05b,
+               moonshot_v1_16b_a3b, granite_moe_1b_a400m,
+               seamless_m4t_large_v2, zamba2_2p7b, internvl2_1b, xlstm_350m)
+
+_MODULES = (gemma3_27b, olmo_1b, qwen15_32b, qwen2_05b, moonshot_v1_16b_a3b,
+            granite_moe_1b_a400m, seamless_m4t_large_v2, zamba2_2p7b,
+            internvl2_1b, xlstm_350m)
+
+ARCHS = {m.CONFIG.name: m.CONFIG for m in _MODULES}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)}")
+    return ARCHS[arch]
+
+
+def cells(include_skipped: bool = False):
+    """All (arch, shape) dry-run cells; long_500k only for sub-quadratic
+    archs unless include_skipped (DESIGN.md §4)."""
+    out = []
+    for name, mc in ARCHS.items():
+        for sname, sc in SHAPES.items():
+            if sname == "long_500k" and not (mc.is_subquadratic or include_skipped):
+                continue
+            out.append((name, sname))
+    return out
+
+
+__all__ = ["ModelConfig", "RunConfig", "ShapeConfig", "SHAPES", "ARCHS",
+           "get_config", "reduced", "cells"]

@@ -1,0 +1,11 @@
+"""gemma3-27b [dense] — 5:1 local:global attention, 128k context.
+[hf:google/gemma-3-1b-pt family; unverified]"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-27b", family="dense",
+    n_layers=62, d_model=5376, n_heads=32, n_kv_heads=16, head_dim=128,
+    d_ff=21504, vocab=262144,
+    window=1024, local_global=5,          # 5 local : 1 global
+    rope_theta=1_000_000.0, tie_embeddings=True, logit_softcap=30.0,
+)

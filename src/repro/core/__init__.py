@@ -1,0 +1,28 @@
+"""Core library: the paper's contribution (backpressure network computation).
+
+Public API:
+  graph:     Graph, ComputeProblem, grid_graph, triangle_graph, paper_grid_problem
+  capacity:  capacity_upper_bound, single_node_capacity  (Theorems 1/4)
+  queues:    NetState, StaticProblem, init_state
+  policies:  PolicyConfig, slot_step, bp_route_slot, computation_slot
+  router:    RouterConfig, RouterState, route  (backpressure MoE routing)
+  regulator: regulator_push  (dummy-packet randomization)
+"""
+from .graph import (Graph, ComputeProblem, grid_graph, line_graph,
+                    triangle_graph, paper_grid_problem)
+from .capacity import (capacity_upper_bound, single_node_capacity,
+                       multi_stream_capacity, CapacityResult,
+                       MultiStreamResult)
+from .queues import NetState, StaticProblem, init_state
+from .policies import PolicyConfig, slot_step, bp_route_slot, computation_slot
+from .router import RouterConfig, RouterState, RouterOut, init_router_state, route
+from .regulator import regulator_push
+
+__all__ = [
+    "Graph", "ComputeProblem", "grid_graph", "line_graph", "triangle_graph",
+    "paper_grid_problem", "capacity_upper_bound", "single_node_capacity",
+    "CapacityResult", "multi_stream_capacity", "MultiStreamResult", "NetState", "StaticProblem", "init_state",
+    "PolicyConfig", "slot_step", "bp_route_slot", "computation_slot",
+    "RouterConfig", "RouterState", "RouterOut", "init_router_state", "route",
+    "regulator_push",
+]

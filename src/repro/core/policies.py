@@ -1,0 +1,268 @@
+"""The paper's control policies as pure JAX slot-step functions.
+
+Implemented policies (paper §III-IV):
+  pi1    — single comp node, BP routing, combine all available pairs.
+  pi1p   — pi1 with the proof-device computation threshold X̄ (Lemma 1).
+  pi2    — pi1 + regulator/dummy randomization (overlapping networks, Thm 3).
+  pi3    — multiple comp nodes: join-shortest-sum-of-queues load balancing
+           (eq. 9), H_n virtual queues (eq. 10), BP routing over 3·N_C
+           classes, all-possible computation, regulator randomization.
+  pi3bar — pi3 without the regulator (the conjectured-optimal variant of §V).
+
+Every step is `slot_step(sp, cfg, state, arrivals, key) -> (state, metrics)`
+and is jit/scan/vmap friendly.  Constants from `StaticProblem` are closed
+over as numpy arrays (become XLA constants).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .queues import NetState, StaticProblem
+from .regulator import regulator_push
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyConfig:
+    name: str = "pi3"            # pi1 | pi1p | pi2 | pi3 | pi3bar
+    eps_b: float = 0.01          # regulator Bernoulli parameter
+    pairing: str = "fifo"        # fifo | bound   (DESIGN.md §1)
+    threshold: float = 0.0       # X̄ for the primed (proof-device) variants
+    fixed_node: int = 0          # comp-node index used by pi1/pi1p/pi2
+    wireless: bool = False       # §IV-C: node-exclusive interference; links
+                                 # activated by greedy maximal matching
+                                 # weighted by differential backlog [17,18]
+
+    @property
+    def use_regulator(self) -> bool:
+        return self.name in ("pi2", "pi3")
+
+    @property
+    def load_balance(self) -> bool:
+        return self.name in ("pi3", "pi3bar")
+
+    @property
+    def thresholded(self) -> bool:
+        return self.name == "pi1p"
+
+
+# ---------------------------------------------------------------------------
+# Backpressure routing (paper's BP box + constraint (1) conventions)
+# ---------------------------------------------------------------------------
+
+def greedy_maximal_matching(edges: jnp.ndarray, weights: jnp.ndarray,
+                            n_nodes: int) -> jnp.ndarray:
+    """Greedy maximal matching under the node-exclusive interference model
+    (paper refs [17, 18]): visit links in decreasing weight order, activate
+    a link iff neither endpoint is already busy.  Returns a [E] bool mask.
+    """
+    E = edges.shape[0]
+    order = jnp.argsort(-weights)
+
+    def body(t, carry):
+        used, sel = carry
+        e = order[t]
+        m, l = edges[e, 0], edges[e, 1]
+        ok = (~used[m]) & (~used[l]) & (weights[e] > 0)
+        used = used.at[m].set(used[m] | ok).at[l].set(used[l] | ok)
+        sel = sel.at[e].set(ok)
+        return used, sel
+
+    used0 = jnp.zeros((n_nodes,), bool)
+    sel0 = jnp.zeros((E,), bool)
+    _, sel = jax.lax.fori_loop(0, E, body, (used0, sel0))
+    return sel
+
+
+def bp_route_slot(sp: StaticProblem, state: NetState,
+                  wireless: bool = False) -> Tuple[NetState, Dict]:
+    """One slot of max-differential-backlog routing over every link.
+
+    Per undirected link, the class (i, n) maximizing |Q_m - Q_k| gets the full
+    link rate R in the decreasing direction; fluid outflows from a queue are
+    capped at its content and split proportionally across links (the paper's
+    "zero packets" convention in expectation).
+
+    wireless=True (paper §IV-C): links interfere node-exclusively; only a
+    greedy maximal matching weighted by |differential backlog| transmits.
+    """
+    Q, Ddum, X = state.Q, state.Ddum, state.X
+    m_idx = jnp.asarray(sp.edges[:, 0])
+    l_idx = jnp.asarray(sp.edges[:, 1])
+    cap = jnp.asarray(sp.edge_cap)
+    NC = sp.n_comp
+
+    diff = Q[m_idx] - Q[l_idx]                     # [E, 3, NC]
+    flat = diff.reshape(diff.shape[0], -1)         # [E, 3*NC]
+    best = jnp.argmax(jnp.abs(flat), axis=1)       # [E]
+    dmax = jnp.take_along_axis(flat, best[:, None], axis=1)[:, 0]
+    best_i = best // NC
+    best_n = best % NC
+
+    alloc = cap * (jnp.abs(dmax) > 0)
+    if wireless:
+        active = greedy_maximal_matching(jnp.asarray(sp.edges),
+                                         jnp.abs(dmax), sp.n_nodes)
+        alloc = alloc * active
+    src = jnp.where(dmax > 0, m_idx, l_idx)
+    dst = jnp.where(dmax > 0, l_idx, m_idx)
+
+    # Cap total outflow of each (node, class) at its queue content.
+    total_out = jnp.zeros_like(Q).at[src, best_i, best_n].add(alloc)
+    scale = jnp.where(total_out > Q, Q / jnp.maximum(total_out, 1e-20), 1.0)
+    actual = alloc * scale[src, best_i, best_n]    # [E]
+
+    # Dummy share of moved processed packets (proportional composition).
+    q0_src = Q[src, 0, best_n]
+    frac_dummy = jnp.where(q0_src > 0, Ddum[src, best_n] / jnp.maximum(q0_src, 1e-20), 0.0)
+    moved_dummy = actual * frac_dummy * (best_i == 0)
+
+    # Departures.
+    Q = Q.at[src, best_i, best_n].add(-actual)
+    Ddum = Ddum.at[src, best_n].add(-moved_dummy)
+
+    # Arrivals: sinks absorb (raw -> X at its comp node; processed -> d).
+    is_sink = jnp.asarray(sp.sink)[dst, best_i, best_n]          # [E]
+    to_net = actual * (~is_sink)
+    Q = Q.at[dst, best_i, best_n].add(to_net)
+    Ddum = Ddum.at[dst, best_n].add(moved_dummy * (~is_sink))
+
+    raw_sink = is_sink & (best_i >= 1)
+    to_X = actual * raw_sink
+    X = X.at[best_n, jnp.maximum(best_i - 1, 0)].add(to_X)
+    cum_arr = state.cum_arr.at[best_n, jnp.maximum(best_i - 1, 0)].add(to_X)
+
+    proc_sink = is_sink & (best_i == 0)
+    dlv = jnp.sum(actual * proc_sink)
+    dlv_useful = jnp.sum((actual - moved_dummy) * proc_sink)
+
+    new = state._replace(
+        Q=Q, Ddum=Ddum, X=X, cum_arr=cum_arr,
+        delivered=state.delivered + dlv,
+        delivered_useful=state.delivered_useful + dlv_useful,
+    )
+    return new, {"routed": jnp.sum(actual)}
+
+
+# ---------------------------------------------------------------------------
+# Pairing / computation (constraint (3) handling — DESIGN.md §1)
+# ---------------------------------------------------------------------------
+
+def available_pairs(sp: StaticProblem, state: NetState, pairing: str) -> jax.Array:
+    """P_n(t): pairs of same-tag raw packets present at each comp node."""
+    if pairing == "fifo":
+        P = jnp.min(state.cum_arr, axis=1) - state.cum_comb
+    elif pairing == "bound":
+        # Paper eq. (7): P_n >= (X1 + X2 - X(t)) / 2, X(t) = raw in network.
+        X_net = state.Q[:, 1, :].sum(axis=0) + state.Q[:, 2, :].sum(axis=0)   # [NC]
+        P = (state.X[:, 0] + state.X[:, 1] - X_net) / 2.0
+    else:
+        raise ValueError(f"unknown pairing model {pairing!r}")
+    # Physical caps: cannot exceed either side's backlog, never negative.
+    return jnp.clip(P, 0.0, jnp.min(state.X, axis=1))
+
+
+def _inject_processed(sp: StaticProblem, state: NetState, amount: jax.Array,
+                      dummy: jax.Array) -> NetState:
+    """Push per-comp-node processed packets into Q_n^{(0,n)} (or deliver if n==d)."""
+    comp = jnp.asarray(sp.comp_nodes)
+    at_dest = comp == sp.dest                          # [NC]
+    to_net = amount * (~at_dest)
+    nidx = jnp.arange(sp.n_comp)
+    Q = state.Q.at[comp, 0, nidx].add(to_net)
+    Ddum = state.Ddum.at[comp, nidx].add(dummy * (~at_dest))
+    dlv = jnp.sum(amount * at_dest)
+    dlv_useful = jnp.sum((amount - dummy) * at_dest)
+    return state._replace(
+        Q=Q, Ddum=Ddum,
+        delivered=state.delivered + dlv,
+        delivered_useful=state.delivered_useful + dlv_useful,
+    )
+
+
+def computation_slot(sp: StaticProblem, cfg: PolicyConfig, state: NetState,
+                     assigned: jax.Array, key: jax.Array) -> Tuple[NetState, Dict]:
+    """Combine pairs at every computation node; route output via the
+    regulator (pi2/pi3) or directly (pi1/pi3bar)."""
+    caps = jnp.asarray(sp.comp_caps)
+    P = available_pairs(sp, state, cfg.pairing)
+    if cfg.thresholded:
+        # pi1': combine C_n only when X1+X2 >= 2 C_n + X̄  (still physically
+        # capped by the pairs actually present).
+        gate = (state.X.sum(axis=1) >= 2.0 * caps + cfg.threshold)
+        Z = jnp.minimum(jnp.where(gate, caps, 0.0), P)
+    else:
+        Z = jnp.minimum(P, caps)                       # combine all possible
+
+    X = state.X - Z[:, None]
+    cum_comb = state.cum_comb + Z
+    state = state._replace(X=X, cum_comb=cum_comb)
+
+    if cfg.use_regulator:
+        Y = state.Y + Z
+        Y, F, dummy = regulator_push(Y, assigned, key, cfg.eps_b)
+        state = state._replace(Y=Y)
+        state = _inject_processed(sp, state, F, dummy)
+    else:
+        zeros = jnp.zeros_like(Z)
+        state = _inject_processed(sp, state, Z, zeros)
+    return state, {"computed": jnp.sum(Z)}
+
+
+# ---------------------------------------------------------------------------
+# Load balancing (eq. 9/10) and arrival injection
+# ---------------------------------------------------------------------------
+
+def load_balance_slot(sp: StaticProblem, cfg: PolicyConfig, state: NetState,
+                      arrivals: jax.Array) -> Tuple[NetState, jax.Array, Dict]:
+    """Assign this slot's A(t) queries to a computation node and inject the
+    corresponding raw packets at the sources."""
+    if cfg.load_balance:
+        score = ((1.0 + cfg.eps_b) * state.Q[jnp.asarray(sp.comp_nodes), 0,
+                                             jnp.arange(sp.n_comp)]
+                 + state.Q[sp.s1, 1, :] + state.Q[sp.s2, 2, :]
+                 + state.H)                                        # eq. (9)
+        n_star = jnp.argmin(score)
+    else:
+        n_star = jnp.asarray(cfg.fixed_node, dtype=jnp.int32)
+
+    assigned = jnp.zeros(sp.n_comp).at[n_star].set(arrivals)       # eq. (10)
+
+    # Inject raw packets; a source that *is* the chosen comp node feeds X
+    # directly (the sink convention).
+    comp = jnp.asarray(sp.comp_nodes)
+    caps = jnp.asarray(sp.comp_caps)
+    Q, X, cum_arr = state.Q, state.X, state.cum_arr
+    for i, s in ((0, sp.s1), (1, sp.s2)):
+        direct = comp[n_star] == s
+        Q = Q.at[s, i + 1, n_star].add(jnp.where(direct, 0.0, arrivals))
+        X = X.at[n_star, i].add(jnp.where(direct, arrivals, 0.0))
+        cum_arr = cum_arr.at[n_star, i].add(jnp.where(direct, arrivals, 0.0))
+
+    H = jnp.maximum(state.H + assigned - caps, 0.0)                # H_n update
+    state = state._replace(Q=Q, X=X, cum_arr=cum_arr, H=H)
+    return state, assigned, {"n_star": n_star}
+
+
+# ---------------------------------------------------------------------------
+# Full slot step
+# ---------------------------------------------------------------------------
+
+def slot_step(sp: StaticProblem, cfg: PolicyConfig, state: NetState,
+              arrivals: jax.Array, key: jax.Array) -> Tuple[NetState, Dict]:
+    """One slot: (i) admit+load-balance, (ii) BP routing, (iii) computation
+    (+ regulator push)."""
+    state, assigned, m1 = load_balance_slot(sp, cfg, state, arrivals)
+    state, m2 = bp_route_slot(sp, state, wireless=cfg.wireless)
+    state, m3 = computation_slot(sp, cfg, state, assigned, key)
+    metrics = {
+        "total_queue": state.total_queue(),
+        "delivered": state.delivered,
+        "delivered_useful": state.delivered_useful,
+        **m1, **m2, **m3,
+    }
+    return state, metrics

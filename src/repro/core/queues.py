@@ -1,0 +1,97 @@
+"""Queue state for the backpressure network-computation system (paper §II-C).
+
+All quantities are JAX arrays so the whole network steps inside `lax.scan`.
+Class index convention: i=0 processed, i=1 raw from s1, i=2 raw from s2.
+Queues are *fluid* (float) — see DESIGN.md §1.
+
+State components (paper notation):
+  Q[k, i, n]   : data queue at node k, class (i, n)    (Q_k^{(i,n)})
+  Ddum[k, n]   : dummy-packet content of Q[k, 0, n]    (regulator tracking)
+  X[n, i]      : raw packets of source i+1 at computation node n (X_n^{(i)})
+  Y[n]         : regulator queue of computed results   (Y_n)
+  H[n]         : virtual admission queue               (H_n)
+  cum_arr[n,i] : cumulative raw arrivals into X[n, i]  (for FIFO pairing)
+  cum_comb[n]  : cumulative pairs combined at n
+  delivered / delivered_useful : cumulative processed packets at d
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .graph import ComputeProblem
+
+
+class NetState(NamedTuple):
+    Q: jax.Array            # [N, 3, NC]
+    Ddum: jax.Array         # [N, NC]
+    X: jax.Array            # [NC, 2]
+    Y: jax.Array            # [NC]
+    H: jax.Array            # [NC]
+    cum_arr: jax.Array      # [NC, 2]
+    cum_comb: jax.Array     # [NC]
+    delivered: jax.Array    # [] total processed packets (incl. dummies) at d
+    delivered_useful: jax.Array  # []
+
+    def total_queue(self) -> jax.Array:
+        """Total backlog tracked for stability (paper §II-D)."""
+        return (self.Q.sum() + self.X.sum() + self.Y.sum())
+
+
+@dataclasses.dataclass(frozen=True)
+class StaticProblem:
+    """Device-ready constant arrays describing a ComputeProblem."""
+
+    n_nodes: int
+    n_comp: int
+    edges: np.ndarray          # [E,2] int32
+    edge_cap: np.ndarray       # [E] float32
+    s1: int
+    s2: int
+    dest: int
+    comp_nodes: np.ndarray     # [NC] int32
+    comp_caps: np.ndarray      # [NC] float32
+    # sink mask: sink[k, i, n] == True when Q_k^{(i,n)} is 0 by convention
+    sink: np.ndarray           # [N, 3, NC] bool
+
+    @staticmethod
+    def build(problem: ComputeProblem) -> "StaticProblem":
+        N = problem.graph.n_nodes
+        NC = problem.n_comp
+        sink = np.zeros((N, 3, NC), dtype=bool)
+        for j, n in enumerate(problem.comp_nodes):
+            sink[n, 1, j] = True          # raw packets terminate at their comp node
+            sink[n, 2, j] = True
+            sink[problem.dest, 0, j] = True   # processed packets terminate at d
+        return StaticProblem(
+            n_nodes=N,
+            n_comp=NC,
+            edges=problem.graph.edges.astype(np.int32),
+            edge_cap=problem.graph.capacity.astype(np.float32),
+            s1=problem.s1,
+            s2=problem.s2,
+            dest=problem.dest,
+            comp_nodes=np.asarray(problem.comp_nodes, dtype=np.int32),
+            comp_caps=np.asarray(problem.comp_caps, dtype=np.float32),
+            sink=sink,
+        )
+
+
+def init_state(sp: StaticProblem) -> NetState:
+    N, NC = sp.n_nodes, sp.n_comp
+    z = jnp.zeros
+    return NetState(
+        Q=z((N, 3, NC), jnp.float32),
+        Ddum=z((N, NC), jnp.float32),
+        X=z((NC, 2), jnp.float32),
+        Y=z((NC,), jnp.float32),
+        H=z((NC,), jnp.float32),
+        cum_arr=z((NC, 2), jnp.float32),
+        cum_comb=z((NC,), jnp.float32),
+        delivered=jnp.zeros((), jnp.float32),
+        delivered_useful=jnp.zeros((), jnp.float32),
+    )

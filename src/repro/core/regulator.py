@@ -1,0 +1,38 @@
+"""Dummy-packet regulator (paper §III-C, eq. (8)).
+
+The computation output is re-randomized: each slot, F(t) = A(t)*(1+B(t))
+packets are pushed downstream from the regulator queue Y, where B(t) is
+Bernoulli(eps_B) independent of everything in the network.  If Y holds fewer
+than F(t) useful results, the difference is made up with *dummy* packets that
+the network routes exactly like real ones.  This decouples the processed-data
+queues from the raw-data queues, which is the key analytical device of
+Theorems 3/5 — and, on TPUs, is precisely static-shape batch padding
+(DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def regulator_push(Y: jax.Array, assigned: jax.Array, key: jax.Array,
+                   eps_b: float) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One slot of the regulator for a vector of computation nodes.
+
+    Args:
+      Y: [NC] regulator queue lengths (useful computed results waiting).
+      assigned: [NC] queries assigned to each node this slot (Ã^(n)(t)).
+      key: PRNG key.
+      eps_b: Bernoulli success probability (the ``arbitrarily small'' control).
+
+    Returns:
+      (Y_new, F, dummy): new queues, packets pushed downstream per node,
+      and how many of them are dummies.
+    """
+    B = jax.random.bernoulli(key, eps_b, shape=assigned.shape).astype(Y.dtype)
+    F = assigned * (1.0 + B)          # eq. (8): F^(n)(t) = (1+B^(n)(t)) Ã^(n)(t)
+    useful = jnp.minimum(Y, F)
+    dummy = F - useful
+    return Y - useful, F, dummy

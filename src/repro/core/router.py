@@ -1,0 +1,95 @@
+"""Backpressure MoE routing — the paper's technique as a first-class
+framework feature (DESIGN.md §2).
+
+Mapping: experts = computation nodes with capacity C_e (tokens/step at
+perfect balance); incoming tokens = the query stream; the paper's virtual
+admission queues H_n (eq. 10) become per-expert backlog counters, and the
+join-the-shortest-sum-of-queues rule (eq. 9) becomes a *selection bias*
+subtracted from the gate affinity.  No auxiliary loss touches the gradient:
+balance is enforced by queue dynamics alone (loss-free), exactly as the
+paper balances computation load without solving an optimization.
+
+State update per step (identical in form to the paper's H_n):
+    H_e <- [H_e + assigned_e - capacity_e]^+
+Selection per token:
+    topk_e( gate_prob_e - beta * H_e / capacity_e )
+Combine weights use the *unbiased* gate probabilities of the selected
+experts (the bias steers placement, not the function value) — the same
+separation the paper makes between routing decisions and packet contents.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class RouterState(NamedTuple):
+    H: jax.Array          # [E] virtual admission queues (float)
+    steps: jax.Array      # [] int32
+
+
+def init_router_state(n_experts: int) -> RouterState:
+    return RouterState(H=jnp.zeros((n_experts,), jnp.float32),
+                       steps=jnp.zeros((), jnp.int32))
+
+
+@dataclasses.dataclass(frozen=True)
+class RouterConfig:
+    n_experts: int
+    k: int                      # experts per token
+    mode: str = "backpressure"  # backpressure | aux | plain
+    beta: float = 1.0           # backpressure bias strength
+    aux_coef: float = 0.01      # Switch-style aux loss coefficient (mode=aux)
+    capacity_factor: float = 1.25
+
+
+class RouterOut(NamedTuple):
+    expert_idx: jax.Array       # [T, k] int32
+    combine_w: jax.Array        # [T, k] float, renormalized gate probs
+    aux_loss: jax.Array         # [] differentiable aux loss (0 unless mode=aux)
+    new_state: RouterState
+    load: jax.Array             # [E] fraction of assignments per expert
+
+
+def route(cfg: RouterConfig, state: RouterState, logits: jax.Array) -> RouterOut:
+    """Route T tokens to k-of-E experts.  logits: [T, E]."""
+    T, E = logits.shape
+    assert E == cfg.n_experts
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+
+    capacity = jnp.asarray(T * cfg.k / E, jnp.float32)   # C_e per step
+    if cfg.mode == "backpressure":
+        bias = cfg.beta * state.H / jnp.maximum(capacity, 1.0)
+        sel_score = probs - jax.lax.stop_gradient(bias)[None, :]
+    else:
+        sel_score = probs
+
+    _, expert_idx = jax.lax.top_k(sel_score, cfg.k)      # [T, k]
+    gathered = jnp.take_along_axis(probs, expert_idx, axis=1)
+    combine_w = gathered / jnp.maximum(gathered.sum(axis=1, keepdims=True), 1e-9)
+
+    one_hot = jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)   # [T, k, E]
+    assigned = one_hot.sum(axis=(0, 1))                  # [E] tokens per expert
+
+    H_new = jnp.maximum(state.H + jax.lax.stop_gradient(assigned) - capacity, 0.0)
+    new_state = RouterState(H=H_new, steps=state.steps + 1)
+
+    if cfg.mode == "aux":
+        # Switch-Transformer load balancing loss: E * sum_e f_e * p_e.
+        f = assigned / jnp.maximum(assigned.sum(), 1.0)
+        p = probs.mean(axis=0)
+        aux = cfg.aux_coef * E * jnp.sum(jax.lax.stop_gradient(f) * p)
+    else:
+        aux = jnp.zeros((), jnp.float32)
+
+    load = assigned / jnp.maximum(assigned.sum(), 1.0)
+    return RouterOut(expert_idx=expert_idx, combine_w=combine_w, aux_loss=aux,
+                     new_state=new_state, load=load)
+
+
+def load_violation(load: jax.Array) -> jax.Array:
+    """max_e load_e / mean load — 1.0 is perfect balance."""
+    return load.max() / jnp.maximum(load.mean(), 1e-9)

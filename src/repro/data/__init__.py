@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, TokenStream, unigram_entropy
+
+__all__ = ["DataConfig", "TokenStream", "unigram_entropy"]

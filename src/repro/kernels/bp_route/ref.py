@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the BP routing decision."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bp_route_ref(qm, ql, cap):
+    # f32 math on f32-cast inputs — the kernel's numeric contract
+    diff = qm.astype(jnp.float32) - ql.astype(jnp.float32)
+    best = jnp.argmax(jnp.abs(diff), axis=1).astype(jnp.int32)
+    dmax = jnp.take_along_axis(diff, best[:, None], axis=1)[:, 0]
+    rate = jnp.where(jnp.abs(dmax) > 0, cap.astype(jnp.float32), 0.0)
+    dirn = jnp.where(dmax > 0, 1, -1).astype(jnp.int32)
+    return best, rate, dirn

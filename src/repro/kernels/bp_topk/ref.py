@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for fused backpressure top-k gating."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bp_topk_ref(scores, bias, k):
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    sel = probs - bias.astype(jnp.float32)[None, :]
+    _, idx = jax.lax.top_k(sel, k)
+    w = jnp.take_along_axis(probs, idx, axis=1)
+    w = w / jnp.maximum(w.sum(axis=1, keepdims=True), 1e-9)
+    return idx.astype(jnp.int32), w

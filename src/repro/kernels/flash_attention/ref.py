@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for flash attention (GQA + causal + sliding window)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, *, causal=True, window=None):
+    """q [B,H,S,D], k/v [B,KH,T,D] -> [B,H,S,D] (f32 math)."""
+    B, H, S, D = q.shape
+    KH, T = k.shape[1], k.shape[2]
+    G = H // KH
+    kk = jnp.repeat(k, G, axis=1)
+    vv = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) / np.sqrt(D)
+    qi = jnp.arange(S)[:, None]
+    ki = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= qi >= ki
+    if window is not None:
+        mask &= ki > qi - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # rows with no valid key -> zeros (matches kernel's l>=eps guard)
+    any_valid = mask.any(axis=1)[None, None, :, None]
+    out = jnp.einsum("bhst,bhtd->bhsd", p, vv.astype(jnp.float32))
+    return jnp.where(any_valid, out, 0.0).astype(q.dtype)

@@ -1,0 +1,354 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  This module is the ONLY place that forces 512
+# placeholder devices — tests and benches see the real single CPU device.
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes and record memory/cost/collective analysis.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch olmo-1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh single|multi|both]
+
+Results are cached as JSON under results/dryrun/ (one file per cell x mesh x
+tag); reruns skip cached cells unless --force.  Failures (sharding mismatch,
+OOM at compile, unsupported collective) are bugs in the system — they are
+recorded with status=error and the sweep continues.
+
+(No `from __future__ import annotations` here: the XLA_FLAGS lines must be
+the first statements in the file.)
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, SHAPES, RunConfig, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch import roofline as rl
+from repro.models import get_model
+from repro.runtime import flags, sharding as shd
+from repro.runtime.step import (init_train_state, make_prefill_step,
+                                make_serve_step, make_train_step)
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _count_params(params) -> int:
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(params)))
+
+
+def _active_params(cfg, params_tree) -> int:
+    """Total params minus inactive expert fraction (MoE)."""
+    total = 0
+    flat = jax.tree_util.tree_flatten_with_path(params_tree)[0]
+    for path, leaf in flat:
+        n = int(np.prod(leaf.shape))
+        keys = "/".join(str(getattr(p, 'key', p)) for p in path)
+        if cfg.n_experts and "moe/" in keys and not keys.endswith("router"):
+            n = int(n * cfg.top_k / cfg.n_experts)
+        total += n
+    return total
+
+
+def _mem_analysis(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+        return {k: int(getattr(ma, k)) for k in (
+            "argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes") if hasattr(ma, k)}
+    except Exception as e:              # CPU backend may not support it
+        return {"error": str(e)}
+
+
+def probe_configs(cfg):
+    """(cfg_small, cfg_large, n_units): homogeneous-unit depth probes for
+    exact per-layer cost extrapolation (XLA cost analysis counts while-loop
+    bodies once; probes compile UNROLLED at 1 and 2 units).
+
+    gemma's 2-layer local tail is folded into fractional units (62/6) — a
+    <2%% approximation, noted in EXPERIMENTS.md.
+    """
+    if cfg.family == "encdec":
+        small = dataclasses.replace(cfg, enc_layers=1, dec_layers=1, n_layers=2)
+        large = dataclasses.replace(cfg, enc_layers=2, dec_layers=2, n_layers=4)
+        return small, large, cfg.enc_layers
+    if cfg.local_global:
+        unit = cfg.local_global + 1
+    elif cfg.attn_every:
+        unit = cfg.attn_every
+    elif cfg.slstm_every:
+        unit = cfg.slstm_every
+    else:
+        unit = 1
+    small = dataclasses.replace(cfg, n_layers=unit)
+    large = dataclasses.replace(cfg, n_layers=2 * unit)
+    return small, large, cfg.n_layers / unit
+
+
+def _slstm_correction(cfg, shape, chips: int) -> dict:
+    """Analytic correction for the sLSTM *time* recurrence (sequential scan;
+    body counted once by cost analysis, runs S-1 more times).  FLOPs are
+    exact; bytes assume gate weights stay VMEM-resident (4*d^2*4B = 16 MB at
+    d=1024 fits) so only activations stream."""
+    if cfg.family != "ssm" or not cfg.slstm_every or shape.kind == "decode":
+        return {}
+    d = cfg.d_model
+    hd = d // cfg.n_heads
+    n_slstm = cfg.n_layers // cfg.slstm_every
+    S = shape.seq_len - (1 if shape.kind == "train" else 0)
+    dp = min(shape.global_batch, 32)
+    b_loc = max(shape.global_batch // dp, 1)
+    step_flops = 2.0 * b_loc * 4.0 * (d * d + d * hd)
+    step_bytes = 10.0 * b_loc * d * 4.0
+    return {"slstm_extra_flops": n_slstm * (S - 1) * step_flops,
+            "slstm_extra_bytes": n_slstm * (S - 1) * step_bytes}
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               rcfg_overrides: dict | None = None, cfg=None):
+    """Build mesh + shardings and lower the cell's step. Returns
+    (lowered, meta)."""
+    cfg = cfg if cfg is not None else get_config(arch)
+    shape = SHAPES[shape_name]
+    rcfg = RunConfig(model=cfg, shape=shape, multi_pod=multi_pod,
+                     **(rcfg_overrides or {}))
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model_size = mesh.shape.get("model", 1)
+    kv_seq_model = (rcfg.kv_seq_tp == "auto"
+                    and cfg.n_kv_heads % model_size != 0
+                    and shape.kind == "decode")
+    rules = shd.make_rules(mesh, fsdp=rcfg.fsdp,
+                           expert_parallel=rcfg.expert_parallel,
+                           seq_shard_decode=rcfg.seq_shard_decode,
+                           kv_seq_model=kv_seq_model)
+    api = get_model(cfg)
+    adt = jnp.bfloat16
+
+    with shd.use_rules(rules), flags.attention_impl(rcfg.attn_impl), \
+            flags.context_parallel(rcfg.ctx_par):
+        if shape.kind == "train":
+            state, axes = init_train_state(rcfg, abstract=True)
+            state_sh = shd.tree_shardings(state, axes, rules)
+            specs, b_axes = api.batch_specs(shape, activ_dtype=adt)
+            batch_sh = shd.tree_shardings(specs, b_axes, rules)
+            step = make_train_step(rcfg)
+            jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                             out_shardings=(state_sh, None),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state, specs)
+            n_par = _count_params(state.params)
+            act_par = _active_params(cfg, state.params)
+        elif shape.kind == "prefill":
+            state, axes = init_train_state(rcfg, abstract=True)
+            p_sh = shd.tree_shardings(state.params, axes.params, rules)
+            specs, b_axes = api.batch_specs(shape, activ_dtype=adt)
+            batch_sh = shd.tree_shardings(specs, b_axes, rules)
+            H = state.router_H
+            H_sh = (shd.tree_shardings(H, axes.router_H, rules)
+                    if H is not None else None)
+            step = make_prefill_step(rcfg)
+            jitted = jax.jit(step, in_shardings=(p_sh, batch_sh, H_sh),
+                             out_shardings=None)
+            lowered = jitted.lower(state.params, specs, H)
+            n_par = _count_params(state.params)
+            act_par = _active_params(cfg, state.params)
+        else:                            # decode
+            state, axes = init_train_state(rcfg, abstract=True)
+            p_sh = shd.tree_shardings(state.params, axes.params, rules)
+            caches = api.init_decode(shape.global_batch, shape.seq_len, adt,
+                                     abstract=True)
+            c_axes = api.cache_axes(caches)
+            c_sh = shd.tree_shardings(caches, c_axes, rules)
+            specs, b_axes = api.batch_specs(shape, activ_dtype=adt)
+            batch_sh = shd.tree_shardings(specs, b_axes, rules)
+            H = state.router_H
+            H_sh = (shd.tree_shardings(H, axes.router_H, rules)
+                    if H is not None else None)
+            step = make_serve_step(rcfg)
+            jitted = jax.jit(step, in_shardings=(p_sh, c_sh, batch_sh, H_sh),
+                             out_shardings=(None, c_sh),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(state.params, caches, specs, H)
+            n_par = _count_params(state.params)
+            act_par = _active_params(cfg, state.params)
+
+    meta = {"arch": arch, "shape": shape_name,
+            "mesh": "multi" if multi_pod else "single",
+            "chips": int(np.prod(mesh.devices.shape)),
+            "n_params": n_par, "active_params": act_par,
+            "rcfg": {k: v for k, v in dataclasses.asdict(rcfg).items()
+                     if k not in ("model", "shape")}}
+    return lowered, meta, shape, cfg
+
+
+def _probe_roofline(arch, shape_name, multi_pod, rcfg_overrides, cfg, shape,
+                    chips):
+    """Depth-probe extrapolation: compile 1-unit and 2-unit UNROLLED models,
+    per-unit cost = large - small, total = small + per_unit*(units-1)."""
+    from repro.runtime import flags
+    small_cfg, large_cfg, n_units = probe_configs(cfg)
+    roofs = []
+    for pc in (small_cfg, large_cfg):
+        with flags.unrolled_scans():
+            lowered, _, _, _ = lower_cell(arch, shape_name,
+                                          multi_pod=multi_pod,
+                                          rcfg_overrides=rcfg_overrides,
+                                          cfg=pc)
+            compiled = lowered.compile()
+        roofs.append(rl.from_compiled(compiled))
+    r1, r2 = roofs
+
+    def extrap(a, b):
+        # per-unit delta clamped at 0: XLA occasionally optimizes the larger
+        # probe harder, and a negative per-layer cost is nonphysical
+        return a + max(b - a, 0.0) * (n_units - 1.0)
+
+    coll = {k: extrap(r1.coll_breakdown.get(k, 0.0),
+                      r2.coll_breakdown.get(k, 0.0))
+            for k in r1.coll_breakdown}
+    corr = _slstm_correction(cfg, shape, chips)
+    flops = extrap(r1.flops_per_device, r2.flops_per_device) \
+        + corr.get("slstm_extra_flops", 0.0)
+    byts = extrap(r1.bytes_per_device, r2.bytes_per_device) \
+        + corr.get("slstm_extra_bytes", 0.0)
+    total_coll = sum(v for k, v in coll.items() if not k.startswith("n_"))
+    roof = rl.Roofline(flops_per_device=flops, bytes_per_device=byts,
+                       coll_bytes_per_device=total_coll, coll_breakdown=coll)
+    return roof, {"n_units": n_units, **corr}
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             rcfg_overrides: dict | None = None, tag: str = "base",
+             probe: bool = True, model_overrides: dict | None = None) -> dict:
+    t0 = time.time()
+    cfg0 = get_config(arch)
+    if model_overrides:
+        cfg0 = dataclasses.replace(cfg0, **model_overrides)
+    lowered, meta, shape, cfg = lower_cell(
+        arch, shape_name, multi_pod=multi_pod, rcfg_overrides=rcfg_overrides,
+        cfg=cfg0)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    hlo = compiled.as_text()
+    roof_raw = rl.from_compiled(compiled, hlo)
+    mf = rl.model_flops(cfg, shape, meta["n_params"], meta["active_params"])
+    chips = meta["chips"]
+    rec = {
+        **meta, "tag": tag, "status": "ok",
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": _mem_analysis(compiled),
+        "roofline_scanned": roof_raw.summary(),
+        "model_flops": mf,
+        "hlo_bytes": len(hlo),
+    }
+    if probe:
+        t0 = time.time()
+        roof, probe_meta = _probe_roofline(arch, shape_name, multi_pod,
+                                           rcfg_overrides, cfg, shape, chips)
+        rec["probe_s"] = round(time.time() - t0, 2)
+        rec["probe"] = probe_meta
+        rec["roofline"] = roof.summary()
+    else:
+        roof = roof_raw
+        rec["roofline"] = roof_raw.summary()
+    hlo_flops_global = roof.flops_per_device * chips
+    rec["useful_flops_ratio"] = (mf / hlo_flops_global
+                                 if hlo_flops_global else None)
+    return rec
+
+
+def cell_path(arch, shape_name, mesh_name, tag="base") -> Path:
+    return RESULTS / f"{arch}__{shape_name}__{mesh_name}__{tag}.json"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="base")
+    ap.add_argument("--set", nargs="*", default=[],
+                    help="RunConfig overrides, e.g. fsdp=false remat=dots")
+    ap.add_argument("--set-model", nargs="*", default=[],
+                    help="ModelConfig overrides, e.g. capacity_factor=1.0")
+    args = ap.parse_args()
+
+    def parse(pairs):
+        out = {}
+        for kv in pairs:
+            k, v = kv.split("=")
+            if v.lower() in ("true", "false"):
+                out[k] = v.lower() == "true"
+            elif v.isdigit():
+                out[k] = int(v)
+            else:
+                try:
+                    out[k] = float(v)
+                except ValueError:
+                    out[k] = v
+        return out
+
+    overrides = parse(args.set)
+    model_overrides = parse(args.set_model)
+
+    from repro.configs import cells
+    if args.all:
+        todo = cells()
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        todo = [(args.arch, args.shape)]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    n_ok = n_err = n_skip = 0
+    for arch, shape_name in todo:
+        for mp in meshes:
+            mesh_name = "multi" if mp else "single"
+            out = cell_path(arch, shape_name, mesh_name, args.tag)
+            if out.exists() and not args.force:
+                n_skip += 1
+                continue
+            print(f"=== {arch} x {shape_name} x {mesh_name} [{args.tag}]",
+                  flush=True)
+            try:
+                rec = run_cell(arch, shape_name, multi_pod=mp,
+                               rcfg_overrides=overrides, tag=args.tag,
+                               model_overrides=model_overrides)
+                r = rec["roofline"]
+                print(f"    ok: compile={rec['compile_s']}s "
+                      f"compute={r['compute_s']:.4f}s "
+                      f"memory={r['memory_s']:.4f}s "
+                      f"coll={r['collective_s']:.4f}s "
+                      f"dominant={r['dominant']} "
+                      f"useful={rec['useful_flops_ratio'] and round(rec['useful_flops_ratio'], 3)}",
+                      flush=True)
+                n_ok += 1
+            except Exception as e:
+                rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                       "tag": args.tag, "status": "error",
+                       "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-4000:]}
+                print(f"    ERROR: {type(e).__name__}: {e}", flush=True)
+                n_err += 1
+            out.write_text(json.dumps(rec, indent=1))
+    print(f"done: ok={n_ok} err={n_err} skipped={n_skip}")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

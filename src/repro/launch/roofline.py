@@ -1,0 +1,152 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+  compute term    = HLO_FLOPs / (chips * peak_FLOPs)
+  memory term     = HLO_bytes / (chips * HBM_bw)
+  collective term = collective_bytes / (chips * link_bw)
+
+cost_analysis() of the (SPMD, per-device) executable supplies FLOPs/bytes
+per chip, so `per_device / peak` == `global / (chips * peak)`.  Collective
+bytes are parsed from the optimized HLO text: we sum result-shape bytes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute with the factors below (per-device wire bytes,
+bidirectional-ring model):
+
+  all-gather       result bytes            (each chip receives V-V/n ~ V)
+  all-reduce       2 x result bytes        (reduce-scatter + all-gather)
+  reduce-scatter   result bytes x group    (operand leaves the chip once)
+  all-to-all       result bytes
+  collective-permute  result bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+# TPU v5e-class constants (per chip) — from the assignment.
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+LINK_BW = 50e9             # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+)\[([\d,]*)\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:                      # iota format [num_groups,group_size]
+        return int(m.group(2))
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device wire bytes by collective kind, from optimized HLO."""
+    out = {"all-gather": 0.0, "all-reduce": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0}
+    counts = {k: 0 for k in out}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group(4)
+        if m.group(1) is not None:      # tuple result: sum elements
+            rb = sum(_shape_bytes(dt, dims)
+                     for dt, dims in _SHAPE_RE.findall(m.group(1)))
+        else:
+            rb = _shape_bytes(m.group(2), m.group(3))
+        if op == "all-reduce":
+            rb *= 2
+        elif op == "reduce-scatter":
+            rb *= _group_size(line)
+        out[op] += rb
+        counts[op] += 1
+    out.update({f"n_{k}": counts[k] for k in counts})
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    coll_breakdown: Dict[str, float]
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes_per_device / LINK_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def summary(self) -> dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "coll_bytes_per_device": self.coll_bytes_per_device,
+            "coll_breakdown": self.coll_breakdown,
+        }
+
+
+def from_compiled(compiled, hlo_text: str | None = None) -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):            # older jax returns [dict]
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(text)
+    total_coll = sum(v for k, v in coll.items() if not k.startswith("n_"))
+    return Roofline(flops_per_device=flops, bytes_per_device=byts,
+                    coll_bytes_per_device=total_coll, coll_breakdown=coll)
+
+
+def model_flops(cfg, shape, n_params: int, active_params: int) -> float:
+    """6*N*D (train) / 2*N*D (inference) with D = tokens in the step."""
+    if shape.kind == "train":
+        D = shape.global_batch * shape.seq_len
+        return 6.0 * active_params * D
+    if shape.kind == "prefill":
+        D = shape.global_batch * shape.seq_len
+        return 2.0 * active_params * D
+    D = shape.global_batch                      # decode: one token per seq
+    return 2.0 * active_params * D

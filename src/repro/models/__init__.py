@@ -1,0 +1,4 @@
+from .api import ModelAPI, get_model
+from .common import Annotated, Init, split_tree
+
+__all__ = ["ModelAPI", "get_model", "Annotated", "Init", "split_tree"]

@@ -1,0 +1,112 @@
+"""Uniform model API across families — the single entry point used by the
+launcher, dry-run, serving engine and tests.
+
+  api = get_model(cfg)
+  params~ = api.init(key, dtype, abstract)          # Annotated tree
+  loss, (H', metrics) = api.loss(params, batch, ...)
+  logits, ... = api.logits(params, batch, ...)      # prefill forward
+  caches = api.init_decode(batch, max_len, dtype, abstract)
+  logits, caches = api.decode_step(params, caches, batch, ...)
+  specs, axes = api.batch_specs(shape)              # ShapeDtypeStruct inputs
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from . import encdec, transformer, vlm, xlstm, zamba
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    mod: Any
+
+    # ---- params / state
+    def init(self, key=None, dtype=jnp.float32, abstract: bool = False):
+        return self.mod.init_lm(self.cfg, key=key, dtype=dtype,
+                                abstract=abstract)
+
+    def init_state(self):
+        if self.cfg.family == "moe":
+            return transformer.init_model_state(self.cfg)
+        return transformer.ModelState(router_H=None)
+
+    # ---- training loss
+    def loss(self, params, batch, *, activ_dtype=jnp.bfloat16, remat="full",
+             router_H=None):
+        return self.mod.lm_loss(self.cfg, params, batch,
+                                activ_dtype=activ_dtype, remat=remat,
+                                router_H=router_H)
+
+    # ---- prefill forward
+    def logits(self, params, batch, *, activ_dtype=jnp.bfloat16,
+               remat="none", router_H=None, last_only=False):
+        if self.cfg.family in ("encdec", "vlm"):
+            return self.mod.lm_logits(self.cfg, params, batch,
+                                      activ_dtype=activ_dtype, remat=remat,
+                                      router_H=router_H, last_only=last_only)
+        return self.mod.lm_logits(self.cfg, params, batch["tokens"],
+                                  activ_dtype=activ_dtype, remat=remat,
+                                  router_H=router_H, last_only=last_only)
+
+    # ---- decode
+    def init_decode(self, batch: int, max_len: int, dtype,
+                    abstract: bool = False):
+        return self.mod.init_decode_caches(self.cfg, batch, max_len, dtype,
+                                           abstract=abstract)
+
+    def cache_axes(self, tree):
+        return self.mod.cache_axes(tree)
+
+    def decode_step(self, params, caches, batch, *,
+                    activ_dtype=jnp.bfloat16, router_H=None):
+        return self.mod.lm_decode_step(self.cfg, params, caches,
+                                       batch["tokens"],
+                                       activ_dtype=activ_dtype,
+                                       router_H=router_H)
+
+    # ---- abstract input specs (dry-run; ShapeDtypeStruct, no allocation)
+    def batch_specs(self, shape: ShapeConfig, activ_dtype=jnp.bfloat16):
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        tok = lambda *sh: jax.ShapeDtypeStruct(sh, jnp.int32)
+        emb = lambda *sh: jax.ShapeDtypeStruct(sh, activ_dtype)
+        if shape.kind == "decode":
+            specs = {"tokens": tok(B)}
+            axes = {"tokens": ("act_batch",)}
+            if cfg.family == "encdec":
+                pass   # cross memory lives in the cache
+            return specs, axes
+        if cfg.family == "encdec":
+            specs = {"frames": emb(B, S, cfg.d_model), "tokens": tok(B, S)}
+            axes = {"frames": ("act_batch", "act_seq", "act_embed"),
+                    "tokens": ("act_batch", "act_seq")}
+        elif cfg.family == "vlm":
+            s_text = S - cfg.n_patches
+            specs = {"patch_embeds": emb(B, cfg.n_patches, cfg.d_model),
+                     "tokens": tok(B, s_text)}
+            axes = {"patch_embeds": ("act_batch", None, "act_embed"),
+                    "tokens": ("act_batch", "act_seq")}
+        else:
+            specs = {"tokens": tok(B, S)}
+            axes = {"tokens": ("act_batch", "act_seq")}
+        return specs, axes
+
+
+_FAMILY = {
+    "dense": transformer,
+    "moe": transformer,
+    "hybrid": zamba,
+    "ssm": xlstm,
+    "encdec": encdec,
+    "vlm": vlm,
+}
+
+
+def get_model(cfg: ModelConfig) -> ModelAPI:
+    return ModelAPI(cfg=cfg, mod=_FAMILY[cfg.family])

@@ -1,0 +1,330 @@
+"""GQA attention with RoPE, sliding windows, KV caches and a flash-decode
+style sharded-KV path.
+
+The einsum implementation here is the *reference* path (used on CPU and as
+the oracle).  On TPU the Pallas `flash_attention` kernel (kernels/) replaces
+the quadratic materialization for train/prefill; the dry-run lowers the
+reference path, whose HLO cost model upper-bounds the kernel's.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import Annotated, Init, apply_rope
+
+
+class KVCache(NamedTuple):
+    """Ring-buffer KV cache with explicit absolute positions.
+
+    For full-attention layers T_cache = max_len; for sliding-window layers
+    T_cache = window (the ring wraps), which keeps long-context decode memory
+    proportional to the window — `kpos` records each slot's absolute position
+    so masking is uniform across both cases.
+    """
+    k: jax.Array      # [B, T_cache, KH, D]
+    v: jax.Array      # [B, T_cache, KH, D]
+    kpos: jax.Array   # [T_cache] int32 absolute positions (-1 = empty)
+    pos: jax.Array    # [] int32 — next absolute position to write
+
+
+def init_attn(cfg, ini: Init, *, kv_heads: int | None = None) -> dict:
+    d, H = cfg.d_model, cfg.n_heads
+    KH = kv_heads or cfg.n_kv_heads
+    Dh = cfg.head_dim
+    p = {
+        "wq": ini.param((d, H, Dh), ("embed", "heads", "head_dim")),
+        "wk": ini.param((d, KH, Dh), ("embed", "kv_heads", "head_dim")),
+        "wv": ini.param((d, KH, Dh), ("embed", "kv_heads", "head_dim")),
+        "wo": ini.param((H, Dh, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = ini.param((H, Dh), ("heads", "head_dim"), kind="zeros")
+        p["bk"] = ini.param((KH, Dh), ("kv_heads", "head_dim"), kind="zeros")
+        p["bv"] = ini.param((KH, Dh), ("kv_heads", "head_dim"), kind="zeros")
+    return p
+
+
+def _project_qkv(cfg, p, x, positions):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mask(q_pos, k_pos, *, causal: bool, window: Optional[int]):
+    """[..., S, T] boolean validity mask from absolute positions."""
+    m = jnp.ones(q_pos.shape[:-1] + (q_pos.shape[-1], k_pos.shape[-1]), bool)
+    if causal:
+        m &= q_pos[..., :, None] >= k_pos[..., None, :]
+    if window is not None:
+        m &= k_pos[..., None, :] > q_pos[..., :, None] - window
+    return m
+
+
+def sdpa(q, k, v, mask) -> jax.Array:
+    """q [B,S,H,D], k/v [B,T,KH,D], mask [B,S,T] -> [B,S,H,D]."""
+    B, S, H, D = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    qh = q.reshape(B, S, KH, G, D)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qh, k) / np.sqrt(D)
+    scores = jnp.where(mask[:, None, None, :, :], scores.astype(jnp.float32),
+                       -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(B, S, H, D)
+
+
+def _pad_to(x, n, axis, value=0):
+    pad = (-x.shape[axis]) % n
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def sdpa_chunked(q, k, v, q_pos, k_pos, *, causal: bool,
+                 window: Optional[int], chunk_q: int = 2048,
+                 chunk_k: int = 2048) -> jax.Array:
+    """Online-softmax (flash) attention in pure XLA: nested `layer_scan`s
+    over query and key chunks so no [S, T] score tensor ever materializes —
+    peak activation memory drops from O(S*T) to O(chunk_q*chunk_k) per
+    head.  This is the XLA counterpart of kernels/flash_attention (the
+    Pallas kernel is the TPU fast path; this path is lowerable everywhere
+    and is what the dry-run measures).
+
+    q [B,S,H,D]; k/v [B,T,KH,D]; q_pos [B,S]; k_pos [B,T] (-1 = invalid).
+    """
+    from repro.runtime.flags import layer_scan
+    B, S, H, D = q.shape
+    KH, T = k.shape[2], k.shape[1]
+    G = H // KH
+    cq, ck = min(chunk_q, S), min(chunk_k, T)
+    qp = _pad_to(q, cq, 1)
+    qpos = _pad_to(q_pos, cq, 1, value=-(10 ** 9))
+    kp = _pad_to(k, ck, 1)
+    vp = _pad_to(v, ck, 1)
+    kpos = _pad_to(k_pos, ck, 1, value=-1)
+    Sq, Tk = qp.shape[1], kp.shape[1]
+    nq, nk = Sq // cq, Tk // ck
+
+    qh = qp.reshape(B, nq, cq, KH, G, D).transpose(1, 0, 2, 3, 4, 5)
+    qpos_c = qpos.reshape(B, nq, cq).transpose(1, 0, 2)
+    kh = kp.reshape(B, nk, ck, KH, D).transpose(1, 0, 2, 3, 4)
+    vh = vp.reshape(B, nk, ck, KH, D).transpose(1, 0, 2, 3, 4)
+    kpos_c = kpos.reshape(B, nk, ck).transpose(1, 0, 2)
+    scale = 1.0 / np.sqrt(D)
+
+    def q_block(_, xs):
+        qc, qpc = xs                               # [B,cq,KH,G,D], [B,cq]
+
+        def kv_block(carry, xs2):
+            m, l, acc = carry
+            kc, vc, kpc = xs2                      # [B,ck,KH,D], [B,ck]
+            s = jnp.einsum("bskgd,btkd->bkgst", qc, kc) * scale
+            s = s.astype(jnp.float32)
+            valid = (kpc[:, None, :] >= 0) & \
+                (qpc[:, :, None] >= 0)             # [B,cq,ck]
+            if causal:
+                valid &= qpc[:, :, None] >= kpc[:, None, :]
+            if window is not None:
+                valid &= kpc[:, None, :] > qpc[:, :, None] - window
+            s = jnp.where(valid[:, None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(valid[:, None, None], p, 0.0)
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgst,btkd->bkgsd", p.astype(vc.dtype), vc)
+            return (m_new, l_new, acc_new.astype(acc.dtype)), None
+
+        m0 = jnp.full((B, KH, G, cq), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, KH, G, cq), jnp.float32)
+        a0 = jnp.zeros((B, KH, G, cq, D), jnp.float32)
+        (m, l, acc), _ = layer_scan(kv_block, (m0, l0, a0),
+                                    (kh, vh, kpos_c))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)           # [B,KH,G,cq,D]
+
+    _, outs = layer_scan(q_block, None, (qh, qpos_c))
+    # outs: [nq, B, KH, G, cq, D] -> [B, Sq, H, D]
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, KH * G, D)
+    return out[:, :S]
+
+
+
+
+def sdpa_banded(q, k, v, q_pos, k_pos, *, window: int) -> jax.Array:
+    """Sliding-window attention in O(S*window): each query block attends to
+    exactly (previous block + own block) of keys, with block size = window.
+    Scan-free (fully visible to HLO cost analysis) and sharding-friendly
+    (the block dim is the sequence dim).  Causality + the window mask are
+    enforced via absolute positions.
+
+    q [B,S,H,D]; k/v [B,T,KH,D] with S == T (self-attention only).
+    """
+    B, S, H, D = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    cb = window
+    qp = _pad_to(q, cb, 1)
+    kp = _pad_to(k, cb, 1)
+    vp = _pad_to(v, cb, 1)
+    qpos = _pad_to(q_pos, cb, 1, value=-(10 ** 9))
+    kpos = _pad_to(k_pos, cb, 1, value=-1)
+    Sp = qp.shape[1]
+    nb = Sp // cb
+
+    qb = qp.reshape(B, nb, cb, KH, G, D)
+    qpb = qpos.reshape(B, nb, cb)
+
+    def banded(t, fill=0):  # [B, Sp, ...] -> [B, nb, 2cb, ...]
+        tb = t.reshape(B, nb, cb, *t.shape[2:])
+        prev = jnp.concatenate(
+            [jnp.full_like(tb[:, :1], fill), tb[:, :-1]], axis=1)
+        return jnp.concatenate([prev, tb], axis=2)
+
+    kb = banded(kp)
+    vb = banded(vp)
+    # block 0's shifted-in band must carry INVALID positions, not pos 0
+    kpb = banded(jnp.where(kpos < 0, -(10 ** 9), kpos)[..., None],
+                 fill=-(10 ** 9))[..., 0]
+
+    s = jnp.einsum("bnskgd,bntkd->bkgnst", qb, kb) / np.sqrt(D)
+    valid = (kpb[:, :, None, :] >= 0) & (qpb[:, :, :, None] >= 0)
+    valid &= qpb[:, :, :, None] >= kpb[:, :, None, :]          # causal
+    valid &= kpb[:, :, None, :] > qpb[:, :, :, None] - window  # window
+    # s: [B,KH,G,nb,cq,ckb]; valid: [B,nb,cq,ckb] -> broadcast over KH,G
+    s = jnp.where(valid[:, None, None], s.astype(jnp.float32), -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    any_valid = valid.any(axis=-1)                              # [B,nb,cb]
+    w = jnp.where(any_valid[:, None, None, :, :, None], w, 0.0)
+    out = jnp.einsum("bkgnst,bntkd->bnskgd", w.astype(vb.dtype), vb)
+    out = out.reshape(B, Sp, KH * G, D)
+    return out[:, :S]
+
+
+def attention(cfg, p: dict, x: jax.Array, positions: jax.Array, *,
+              window: Optional[int] = None, causal: bool = True) -> jax.Array:
+    """Full (train/prefill) self-attention; impl chosen by
+    runtime.flags.attention_impl (naive materialized vs chunked
+    online-softmax)."""
+    from repro.runtime import flags
+    from repro.runtime.sharding import constrain
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    pos = positions if positions.ndim == 2 else positions[None, :]
+    pos = jnp.broadcast_to(pos, x.shape[:2])
+    if flags.ctx_par():
+        # context parallelism: q-sequence sharded over the model axis for
+        # the O(S*T) part; K/V replicated (gathered) on that axis.
+        q = constrain(q, ("act_batch", "act_seq_ctx", None, None))
+        k = constrain(k, ("act_batch", None, None, None))
+        v = constrain(v, ("act_batch", None, None, None))
+    if flags.attn_impl() == "chunked" and window is not None and causal:
+        # sliding-window layers: banded O(S*window) form (scan-free)
+        out = sdpa_banded(q, k, v, pos, pos, window=window)
+    elif flags.attn_impl() == "chunked":
+        # under context parallelism the q-seq dim is sharded over 'model';
+        # a scan over q chunks would destroy that sharding, so chunk only
+        # the KV axis (q = one block, locally full).
+        cq = 10 ** 9 if flags.ctx_par() else 2048
+        out = sdpa_chunked(q, k, v, pos, pos, causal=causal, window=window,
+                           chunk_q=cq)
+    else:
+        m = _mask(pos, pos, causal=causal, window=window)
+        out = sdpa(q, k, v, m)
+    if flags.ctx_par():
+        out = constrain(out, ("act_batch", "act_seq_ctx", None, None))
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def cross_attention(cfg, p: dict, x: jax.Array, memory_kv, mem_mask=None):
+    """Decoder cross-attention against precomputed encoder K/V."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+    k, v = memory_kv
+    B, S = x.shape[:2]
+    T = k.shape[1]
+    m = jnp.ones((B, S, T), bool) if mem_mask is None else mem_mask
+    out = sdpa(q, k, v, m)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+
+
+def encode_kv(cfg, p: dict, mem: jax.Array):
+    dt = mem.dtype
+    k = jnp.einsum("btd,dhk->bthk", mem, p["wk"].astype(dt))
+    v = jnp.einsum("btd,dhk->bthk", mem, p["wv"].astype(dt))
+    if "bk" in p:
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# Decode path (one token against a cache)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int, dtype,
+               kv_heads: int | None = None, window: Optional[int] = None,
+               abstract: bool = False) -> KVCache:
+    KH = kv_heads or cfg.n_kv_heads
+    T_cache = min(window, max_len) if window else max_len
+    shape = (batch, T_cache, KH, cfg.head_dim)
+    if abstract:
+        return KVCache(jax.ShapeDtypeStruct(shape, dtype),
+                       jax.ShapeDtypeStruct(shape, dtype),
+                       jax.ShapeDtypeStruct((T_cache,), jnp.int32),
+                       jax.ShapeDtypeStruct((), jnp.int32))
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                   jnp.full((T_cache,), -1, jnp.int32),
+                   jnp.zeros((), jnp.int32))
+
+
+def prefill_cache(cache: KVCache, k: jax.Array, v: jax.Array) -> KVCache:
+    """Load a full prefix (no wrap) into a fresh cache; k/v: [B, S, KH, D]."""
+    S = k.shape[1]
+    kc = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype),
+                                      (0, 0, 0, 0))
+    vc = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype),
+                                      (0, 0, 0, 0))
+    kpos = jax.lax.dynamic_update_slice(cache.kpos, jnp.arange(S, dtype=jnp.int32),
+                                        (0,))
+    return KVCache(kc, vc, kpos, jnp.asarray(S, jnp.int32))
+
+
+def decode_attention(cfg, p: dict, x: jax.Array, cache: KVCache, *,
+                     window: Optional[int] = None):
+    """x: [B, 1, d]; writes at pos % T_cache, attends over valid slots."""
+    B = x.shape[0]
+    T_cache = cache.k.shape[1]
+    positions = jnp.broadcast_to(cache.pos[None, None], (B, 1))
+    q, k_new, v_new = _project_qkv(cfg, p, x, positions)
+    wslot = cache.pos % T_cache
+    k = jax.lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype),
+                                     (0, wslot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype),
+                                     (0, wslot, 0, 0))
+    kpos = jax.lax.dynamic_update_slice(
+        cache.kpos, cache.pos[None].astype(jnp.int32), (wslot,))
+    valid = (kpos >= 0) & (kpos <= cache.pos)
+    if window is not None:
+        valid &= kpos > cache.pos - window
+    mask = jnp.broadcast_to(valid[None, None, :], (B, 1, T_cache))
+    out = sdpa(q, k, v, mask)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, KVCache(k, v, kpos, cache.pos + 1)

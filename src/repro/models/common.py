@@ -1,0 +1,192 @@
+"""Shared model building blocks: annotated params, norms, RoPE, embeddings.
+
+Params are plain pytrees (nested dicts of arrays).  During init every leaf is
+an `Annotated(value, axes)` carrying *logical* axis names ("vocab", "embed",
+"heads", "ff", "experts", ...); `split_tree` separates the value tree from
+the axes tree, and `runtime.sharding` maps logical axes -> mesh axes with
+divisibility checks.  Abstract init (ShapeDtypeStruct leaves) supports the
+no-allocation dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Annotated(NamedTuple):
+    value: Any                      # jax.Array | jax.ShapeDtypeStruct
+    axes: tuple                     # logical axis names, len == value.ndim
+
+
+def is_annotated(x) -> bool:
+    return isinstance(x, Annotated)
+
+
+@dataclasses.dataclass
+class Init:
+    """Parameter factory: concrete (PRNG) or abstract (ShapeDtypeStruct).
+
+    `prefix` prepends stacked-layer dims (logical axis "layers") to every
+    param — used to build scan-over-layers weight stacks in one shot.
+    """
+    key: jax.Array | None
+    dtype: Any = jnp.float32
+    abstract: bool = False
+    prefix: tuple = ()
+
+    def _next(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def stacked(self, *ns: int) -> "Init":
+        return dataclasses.replace(self, prefix=self.prefix + tuple(ns))
+
+    def param(self, shape: Sequence[int], axes: Sequence[str | None],
+              scale: float | None = None, kind: str = "normal") -> Annotated:
+        shape = tuple(int(s) for s in shape)
+        assert len(axes) == len(shape), (shape, axes)
+        if scale is None:
+            fan_in = shape[0] if len(shape) >= 1 else 1
+            scale = 1.0 / np.sqrt(max(fan_in, 1))
+        full_shape = tuple(self.prefix) + shape
+        full_axes = ("layers",) * len(self.prefix) + tuple(axes)
+        if self.abstract:
+            return Annotated(jax.ShapeDtypeStruct(full_shape, self.dtype),
+                             full_axes)
+        if kind == "zeros":
+            v = jnp.zeros(full_shape, self.dtype)
+        elif kind == "ones":
+            v = jnp.ones(full_shape, self.dtype)
+        else:
+            v = (jax.random.truncated_normal(self._next(), -2.0, 2.0, full_shape,
+                                             jnp.float32) * scale).astype(self.dtype)
+        return Annotated(v, full_axes)
+
+
+def split_tree(tree):
+    """(annotated tree) -> (value tree, axes tree)."""
+    values = jax.tree_util.tree_map(lambda a: a.value, tree, is_leaf=is_annotated)
+    axes = jax.tree_util.tree_map(lambda a: a.axes, tree, is_leaf=is_annotated)
+    return values, axes
+
+
+# ---------------------------------------------------------------------------
+# Normalization
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, gamma: jax.Array | None, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    if gamma is not None:
+        x = x * (1.0 + gamma.astype(jnp.float32))
+    return x.astype(dt)
+
+
+def layernorm_nonparam(x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """OLMo's non-parametric LayerNorm (no gain/bias)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps)).astype(dt)
+
+
+def norm(cfg, x: jax.Array, gamma: jax.Array | None) -> jax.Array:
+    if cfg.norm == "layernorm_nonparam":
+        return layernorm_nonparam(x)
+    return rmsnorm(x, gamma)
+
+
+def init_norm(cfg, ini: Init, d: int) -> Annotated | None:
+    if cfg.norm == "layernorm_nonparam":
+        return None
+    return ini.param((d,), ("embed",), kind="zeros")   # gamma stored as (1+g)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (GPT-NeoX half-rotation)
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, D]; positions: [B, S] (or [S]) int32."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                      # [D/2]
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, S, D/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embedding(cfg, ini: Init) -> dict:
+    p = {"table": ini.param((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                            scale=0.02)}
+    if not cfg.tie_embeddings:
+        p["head"] = ini.param((cfg.d_model, cfg.vocab), ("embed", "vocab"))
+    return p
+
+
+def embed(cfg, p: dict, tokens: jax.Array, dtype) -> jax.Array:
+    x = p["table"].astype(dtype)[tokens]
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), dtype)
+    return x
+
+
+def unembed(cfg, p: dict, x: jax.Array) -> jax.Array:
+    """Logits in the activation dtype (CE upcasts; avoids f32 [B,S,V])."""
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("...d,vd->...v", x, p["table"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("...d,dv->...v", x, p["head"].astype(x.dtype))
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = (jnp.tanh(logits.astype(jnp.float32) / c) * c).astype(x.dtype)
+    return logits
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: jax.Array | None = None) -> jax.Array:
+    """Mean next-token CE; f32 math on any-dtype logits, labels int."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, w_gate.astype(x.dtype))
+    u = jnp.einsum("...d,df->...f", x, w_up.astype(x.dtype))
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u,
+                      w_down.astype(x.dtype))
+
+
+def init_mlp(cfg, ini: Init, d: int | None = None, ff: int | None = None) -> dict:
+    d = d or cfg.d_model
+    ff = ff or cfg.d_ff
+    return {
+        "gate": ini.param((d, ff), ("embed", "ff")),
+        "up": ini.param((d, ff), ("embed", "ff")),
+        "down": ini.param((ff, d), ("ff", "embed")),
+    }

@@ -1,0 +1,188 @@
+"""Encoder-decoder backbone (seamless-m4t): bidirectional encoder over
+precomputed frame embeddings (modality frontend is a stub per the
+assignment), causal decoder with cross-attention.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime.flags import layer_scan
+
+from .attention import (KVCache, attention, cross_attention, decode_attention,
+                        encode_kv, init_attn, init_cache)
+from .common import (Init, cross_entropy, embed, init_embedding, init_mlp,
+                     init_norm, norm, swiglu, unembed)
+from . import transformer as tfm
+
+
+def init_dec_block(cfg, ini: Init) -> dict:
+    return {
+        "ln1": init_norm(cfg, ini, cfg.d_model),
+        "attn": init_attn(cfg, ini),
+        "lnx": init_norm(cfg, ini, cfg.d_model),
+        "xattn": init_attn(cfg, ini),
+        "ln2": init_norm(cfg, ini, cfg.d_model),
+        "mlp": init_mlp(cfg, ini),
+    }
+
+
+def init_lm(cfg, key=None, dtype=jnp.float32, abstract=False) -> dict:
+    ini = Init(key=key, dtype=dtype, abstract=abstract)
+    return {
+        "embed": init_embedding(cfg, ini),
+        "encoder": tfm.init_block(cfg, ini.stacked(cfg.enc_layers), moe=False),
+        "ln_enc": init_norm(cfg, ini, cfg.d_model),
+        "decoder": init_dec_block(cfg, ini.stacked(cfg.dec_layers)),
+        "ln_f": init_norm(cfg, ini, cfg.d_model),
+    }
+
+
+def encode(cfg, params, frames, *, remat="full"):
+    """frames: [B, S_src, d] (precomputed embeddings) -> memory [B, S_src, d]."""
+    B, S, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    body = functools.partial(tfm.block_fwd, cfg, window=None, causal=False)
+    if remat != "none":
+        body = jax.checkpoint(body)
+
+    def f(x, lp):
+        x, _, _ = body(lp, x, positions)
+        return x, None
+
+    x, _ = layer_scan(f, frames, params["encoder"])
+    return norm(cfg, x, params["ln_enc"])
+
+
+def dec_block_fwd(cfg, p, x, positions, memory):
+    h = norm(cfg, x, p["ln1"])
+    h = attention(cfg, p["attn"], h, positions, window=None, causal=True)
+    x = x + h
+    h = norm(cfg, x, p["lnx"])
+    mem_kv = encode_kv(cfg, p["xattn"], memory)
+    h = cross_attention(cfg, p["xattn"], h, mem_kv)
+    x = x + h
+    h = norm(cfg, x, p["ln2"])
+    return x + swiglu(h, p["mlp"]["gate"], p["mlp"]["up"], p["mlp"]["down"])
+
+
+def decode_fwd(cfg, params, tokens, memory, *, activ_dtype, remat="full",
+               last_only=False):
+    x = embed(cfg, params["embed"], tokens, activ_dtype)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    body = functools.partial(dec_block_fwd, cfg)
+    if remat != "none":
+        body = jax.checkpoint(body)
+
+    def f(x, lp):
+        return body(lp, x, positions, memory), None
+
+    x, _ = layer_scan(f, x, params["decoder"])
+    x = norm(cfg, x, params["ln_f"])
+    if last_only:
+        x = x[:, -1:]
+    return unembed(cfg, params["embed"], x)
+
+
+def lm_loss(cfg, params, batch, *, activ_dtype=jnp.bfloat16, remat="full",
+            router_H=None):
+    """batch: {frames [B, S_src, d], tokens [B, S_tgt]}."""
+    memory = encode(cfg, params, batch["frames"].astype(activ_dtype),
+                    remat=remat)
+    logits = decode_fwd(cfg, params, batch["tokens"][:, :-1], memory,
+                        activ_dtype=activ_dtype, remat=remat)
+    ce = cross_entropy(logits, batch["tokens"][:, 1:])
+    return ce, (router_H, {"ce": ce})
+
+
+def lm_logits(cfg, params, batch, *, activ_dtype=jnp.bfloat16, remat="full",
+              router_H=None, last_only=False):
+    """Prefill = encode + full decoder forward over the target prefix."""
+    memory = encode(cfg, params, batch["frames"].astype(activ_dtype),
+                    remat=remat)
+    logits = decode_fwd(cfg, params, batch["tokens"], memory,
+                        activ_dtype=activ_dtype, remat=remat,
+                        last_only=last_only)
+    return logits, router_H, jnp.zeros((), jnp.float32)
+
+
+class EncDecCache(NamedTuple):
+    self_kv: KVCache       # stacked [dec_layers], decoder self-attention
+    cross_k: jax.Array     # [dec_layers, B, S_src, KH, Dh]
+    cross_v: jax.Array
+
+
+def init_decode_caches(cfg, batch, max_len, dtype, abstract=False):
+    L = cfg.dec_layers
+    KH, Dh = cfg.n_kv_heads, cfg.head_dim
+
+    def expand(prefix, tree):
+        def one(a):
+            if abstract:
+                return jax.ShapeDtypeStruct(prefix + a.shape, a.dtype)
+            return jnp.broadcast_to(a[(None,) * len(prefix)], prefix + a.shape)
+        return jax.tree_util.tree_map(one, tree)
+
+    xshape = (L, batch, max_len, KH, Dh)
+    if abstract:
+        ck = jax.ShapeDtypeStruct(xshape, dtype)
+        cv = jax.ShapeDtypeStruct(xshape, dtype)
+    else:
+        ck = jnp.zeros(xshape, dtype)
+        cv = jnp.zeros(xshape, dtype)
+    return EncDecCache(
+        self_kv=expand((L,), init_cache(cfg, batch, max_len, dtype,
+                                        abstract=abstract)),
+        cross_k=ck, cross_v=cv)
+
+
+def cache_axes(tree: EncDecCache):
+    xkv = ("layers", "cache_batch", "cache_seq", "act_kv_heads", None)
+    return EncDecCache(self_kv=tfm.cache_axes(tree.self_kv),
+                       cross_k=xkv, cross_v=xkv)
+
+
+def build_cross_cache(cfg, params, memory, max_len, dtype,
+                      self_cache=None) -> EncDecCache:
+    """Precompute per-decoder-layer cross K/V from encoder output (the
+    serving-engine prefill step for enc-dec models)."""
+    def kv_one(lp):
+        return encode_kv(cfg, lp["xattn"], memory)
+    ck, cv = jax.lax.map(lambda lp: kv_one(lp), params["decoder"])
+    if self_cache is None:
+        B = memory.shape[0]
+        self_cache = init_decode_caches(
+            cfg, B, max_len, dtype).self_kv
+    return EncDecCache(self_kv=self_cache, cross_k=ck.astype(dtype),
+                       cross_v=cv.astype(dtype))
+
+
+def lm_decode_step(cfg, params, caches: EncDecCache, tokens, *,
+                   activ_dtype=jnp.bfloat16, router_H=None):
+    """One decoder token against self cache + precomputed cross K/V."""
+    x = embed(cfg, params["embed"], tokens[:, None], activ_dtype)
+
+    def f(x, xs):
+        lp, c, ck, cv = xs
+        h = norm(cfg, x, lp["ln1"])
+        h, c = decode_attention(cfg, lp["attn"], h, c, window=None)
+        x = x + h
+        h = norm(cfg, x, lp["lnx"])
+        h = cross_attention(cfg, lp["xattn"], h,
+                            (ck.astype(x.dtype), cv.astype(x.dtype)))
+        x = x + h
+        h = norm(cfg, x, lp["ln2"])
+        x = x + swiglu(h, lp["mlp"]["gate"], lp["mlp"]["up"], lp["mlp"]["down"])
+        return x, c
+
+    x, self_new = layer_scan(
+        f, x, (params["decoder"], caches.self_kv, caches.cross_k,
+               caches.cross_v))
+    x = norm(cfg, x, params["ln_f"])
+    logits = unembed(cfg, params["embed"], x)[:, 0, :]
+    return logits, EncDecCache(self_kv=self_new, cross_k=caches.cross_k,
+                               cross_v=caches.cross_v)

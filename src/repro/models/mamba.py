@@ -1,0 +1,192 @@
+"""Mamba2 (SSD) block — TPU-idiomatic chunked scan.
+
+The GPU reference implementation leans on fused CUDA scans; here the paper's
+(Mamba2) recurrence is restructured for the MXU: a sequential `lax.scan`
+over chunks whose per-chunk work is dense matmuls (intra-chunk lower-
+triangular attention-like products and inter-chunk state updates), exactly
+the SSD block-decomposition.  Decode is the O(1) state recurrence.
+
+Shapes: d_in = expand*d_model inner channels, nh = d_in/hd heads (state
+shared across head dims like Mamba2's multi-value form), ns = ssm_state.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.sharding import constrain
+from .common import Init
+
+
+class MambaState(NamedTuple):
+    S: jax.Array        # [B, nh, hd, ns] state matrices
+    conv: jax.Array     # [B, kw-1, conv_dim] causal-conv tail buffer
+
+
+KW = 4  # depthwise conv width
+
+
+def dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh = d_in // cfg.ssm_head_dim
+    return d_in, nh, cfg.ssm_state, cfg.ssm_head_dim
+
+
+def init_mamba(cfg, ini: Init) -> dict:
+    d = cfg.d_model
+    d_in, nh, ns, hd = dims(cfg)
+    conv_dim = d_in + 2 * ns
+    return {
+        "wz": ini.param((d, d_in), ("embed", "dinner")),
+        "wx": ini.param((d, d_in), ("embed", "dinner")),
+        "wB": ini.param((d, ns), ("embed", "state")),
+        "wC": ini.param((d, ns), ("embed", "state")),
+        "wdt": ini.param((d, nh), ("embed", "ssm_heads")),
+        "dt_bias": ini.param((nh,), ("ssm_heads",), kind="zeros"),
+        "A_log": ini.param((nh,), ("ssm_heads",), kind="zeros"),
+        "Dskip": ini.param((nh,), ("ssm_heads",), kind="ones"),
+        "conv_w": ini.param((KW, conv_dim), ("conv", "dinner"), scale=0.5),
+        "conv_b": ini.param((conv_dim,), ("dinner",), kind="zeros"),
+        "gamma": ini.param((d_in,), ("dinner",), kind="zeros"),
+        "wo": ini.param((d_in, d), ("dinner", "embed")),
+    }
+
+
+def _project(cfg, p, u):
+    dt_ = u.dtype
+    z = jnp.einsum("bsd,de->bse", u, p["wz"].astype(dt_))
+    x = jnp.einsum("bsd,de->bse", u, p["wx"].astype(dt_))
+    Bm = jnp.einsum("bsd,dn->bsn", u, p["wB"].astype(dt_))
+    Cm = jnp.einsum("bsd,dn->bsn", u, p["wC"].astype(dt_))
+    dt = jnp.einsum("bsd,dh->bsh", u, p["wdt"].astype(dt_))
+    return z, x, Bm, Cm, dt
+
+
+def _gated_out(cfg, p, y, z, B, S, d_in):
+    dt_ = z.dtype                 # residual/activation dtype (y may be f32)
+    y = y.reshape(B, S, d_in).astype(dt_) * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)
+    y = (yf * (1.0 + p["gamma"].astype(jnp.float32))).astype(dt_)
+    return jnp.einsum("bse,ed->bsd", y, p["wo"].astype(dt_))
+
+
+def mamba_fwd(cfg, p: dict, u: jax.Array) -> jax.Array:
+    """Train/prefill: u [B, S, d] -> [B, S, d] via chunked SSD scan."""
+    B, S0, d = u.shape
+    pad = (-S0) % min(cfg.ssm_chunk, S0)
+    if pad:
+        u = jnp.concatenate(
+            [u, jnp.zeros((B, pad, d), u.dtype)], axis=1)
+    S = u.shape[1]
+    d_in, nh, ns, hd = dims(cfg)
+    Lc = min(cfg.ssm_chunk, S)
+    nC = S // Lc
+
+    z, x, Bm, Cm, dt = _project(cfg, p, u)
+
+    # causal depthwise conv over (x, B, C)
+    xbc = jnp.concatenate([x, Bm, Cm], axis=-1)
+    zpad = jnp.zeros((B, KW - 1, xbc.shape[-1]), xbc.dtype)
+    xp = jnp.concatenate([zpad, xbc], axis=1)
+    w = p["conv_w"].astype(xbc.dtype)
+    conv = sum(xp[:, i:i + S] * w[i][None, None, :] for i in range(KW))
+    xbc = jax.nn.silu(conv + p["conv_b"].astype(xbc.dtype))
+    x, Bm, Cm = jnp.split(xbc, [d_in, d_in + ns], axis=-1)
+
+    x = x.reshape(B, S, nh, hd)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))    # [B,S,nh]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                # [nh] (<0)
+    loga = dt * A[None, None, :]                                # log decay
+    xbar = x * dt.astype(x.dtype)[..., None]                    # dt-scaled input
+
+    # chunk views
+    def chunk(t):
+        return t.reshape(B, nC, Lc, *t.shape[2:])
+    xc, Bc, Cc, lc = map(chunk, (xbar, Bm, Cm, loga))
+    cum = jnp.cumsum(lc, axis=2)                                # [B,nC,Lc,nh]
+
+    # intra-chunk (lower-triangular "attention" with decay weights)
+    scores = jnp.einsum("bcln,bcsn->bcls", Cc, Bc)              # [B,nC,Lc,Lc]
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]       # [B,nC,Lc,Lc,nh]
+    tri = jnp.tril(jnp.ones((Lc, Lc), bool))
+    wgt = jnp.where(tri[None, None, :, :, None], jnp.exp(decay), 0.0)
+    y_intra = jnp.einsum("bcls,bclsh,bcshp->bclhp", scores, wgt, xc)
+
+    # inter-chunk state carry: S' = e^{sum l} S + sum_s e^{cum_L - cum_s} xbar_s B_s
+    # Linear recurrence -> associative parallel prefix (TPU-idiomatic: log-depth
+    # instead of a sequential while loop, and fully visible to HLO cost analysis).
+    seg = jnp.exp(cum[:, :, -1:, :] - cum)                      # [B,nC,Lc,nh]
+    chunk_in = jnp.einsum("bcsn,bcsh,bcshp->bchpn", Bc, seg,
+                          xc).astype(jnp.float32)               # [B,nC,nh,hd,ns]
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                     # [B,nC,nh]
+
+    def combine(a, b):
+        (da, sa), (db, sb) = a, b
+        return da * db, sb + sa * db[..., None, None]
+
+    dec_all, S_all = jax.lax.associative_scan(
+        combine, (chunk_decay, chunk_in), axis=1)
+    # S_all[c] = state AFTER chunk c; state entering chunk c is S_all[c-1]
+    S_in = jnp.concatenate(
+        [jnp.zeros((B, 1, nh, hd, ns), jnp.float32), S_all[:, :-1]], axis=1)
+
+    y_inter = jnp.einsum("bcln,bclh,bchpn->bclhp",
+                         Cc, jnp.exp(cum).astype(Cc.dtype), S_in.astype(Cc.dtype))
+    y = (y_intra + y_inter).reshape(B, S, nh, hd)
+    y = y + x * p["Dskip"].astype(x.dtype)[None, None, :, None]
+    out = _gated_out(cfg, p, y, z[:, :S], B, S, d_in)
+    return out[:, :S0] if pad else out
+
+
+def init_mamba_state(cfg, batch: int, dtype, abstract: bool = False) -> MambaState:
+    d_in, nh, ns, hd = dims(cfg)
+    conv_dim = d_in + 2 * ns
+    s_shape = (batch, nh, hd, ns)
+    c_shape = (batch, KW - 1, conv_dim)
+    if abstract:
+        return MambaState(jax.ShapeDtypeStruct(s_shape, jnp.float32),
+                          jax.ShapeDtypeStruct(c_shape, dtype))
+    return MambaState(jnp.zeros(s_shape, jnp.float32), jnp.zeros(c_shape, dtype))
+
+
+def mamba_state_axes(tree):
+    def one(s: MambaState):
+        pre = ("layers",) * (s.S.ndim - 4)
+        return MambaState(S=pre + ("cache_batch", "ssm_heads", None, None),
+                          conv=pre + ("cache_batch", None, "act_dinner"))
+    return jax.tree_util.tree_map(one, tree,
+                                  is_leaf=lambda x: isinstance(x, MambaState))
+
+
+def mamba_decode(cfg, p: dict, u: jax.Array,
+                 state: MambaState) -> Tuple[jax.Array, MambaState]:
+    """u: [B, 1, d]; O(1) state update."""
+    B = u.shape[0]
+    d_in, nh, ns, hd = dims(cfg)
+    z, x, Bm, Cm, dt = _project(cfg, p, u)
+
+    xbc = jnp.concatenate([x, Bm, Cm], axis=-1)                 # [B,1,conv_dim]
+    hist = jnp.concatenate([state.conv, xbc], axis=1)           # [B,KW,conv_dim]
+    w = p["conv_w"].astype(xbc.dtype)
+    conv = jnp.einsum("bkc,kc->bc", hist, w)[:, None, :]
+    xbc_c = jax.nn.silu(conv + p["conv_b"].astype(xbc.dtype))
+    x, Bm, Cm = jnp.split(xbc_c, [d_in, d_in + ns], axis=-1)
+
+    x = x.reshape(B, nh, hd)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))[:, 0]   # [B,nh]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt * A[None, :])                                # [B,nh]
+    xbar = x.astype(jnp.float32) * dt[..., None]
+
+    S1 = state.S * a[:, :, None, None] + jnp.einsum(
+        "bhp,bn->bhpn", xbar, Bm[:, 0].astype(jnp.float32))
+    y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32), S1)
+    y = y.astype(u.dtype) + x * p["Dskip"].astype(x.dtype)[None, :, None]
+    out = _gated_out(cfg, p, y[:, None], z, B, 1, d_in)
+    return out, MambaState(S=S1, conv=hist[:, 1:])

@@ -1,0 +1,158 @@
+"""Mixture-of-Experts FFN with backpressure (paper eq. 9/10) routing.
+
+Dispatch is sort-based with static expert capacity: tokens are ranked within
+their chosen expert via an argsort over expert ids and scattered into
+[E, Cap, d] buffers (overflow -> dropped, like the paper's finite computation
+capacity C_n).  This costs O(T·k) index ops + the expert matmuls only — no
+one-hot dispatch einsum (whose FLOPs would dwarf the expert FFN itself).
+
+Sharding: token groups G -> ("pod","data"), expert buffers E -> "model"
+(expert parallelism; XLA inserts the dispatch/combine all-to-alls at the
+boundary).  The router's virtual queues H follow the paper's
+H_e <- [H_e + assigned_e - C_e]^+ with selection bias beta·H/C (router.py).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.router import RouterState
+from .common import Init
+
+
+def init_moe(cfg, ini: Init) -> dict:
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": ini.param((d, E), ("embed", "experts"), scale=0.02),
+        "gate": ini.param((E, d, ff), ("experts", "embed", "expert_ff")),
+        "up": ini.param((E, d, ff), ("experts", "embed", "expert_ff")),
+        "down": ini.param((E, ff, d), ("experts", "expert_ff", "embed")),
+    }
+
+
+def _route(cfg, p, x_flat, router_state: RouterState, *,
+           use_kernel: bool = False):
+    """Select k experts/token.  x_flat: [G, Tg, d].
+
+    use_kernel=True runs the fused Pallas bp_topk kernel (softmax + H-bias
+    + top-k + renorm in one VMEM pass) — the TPU fast path for inference
+    routing; gradients flow through the einsum path, so training keeps the
+    jnp formulation."""
+    G, Tg, _ = x_flat.shape
+    E, k = cfg.n_experts, cfg.top_k
+    logits = jnp.einsum("gtd,de->gte", x_flat, p["router"].astype(x_flat.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+
+    cap_step = jnp.asarray(G * Tg * k / E, jnp.float32)     # C_e per step
+    if cfg.router == "backpressure":
+        bias = jax.lax.stop_gradient(
+            router_state.H / jnp.maximum(cap_step, 1.0))
+    else:
+        bias = jnp.zeros((E,), jnp.float32)
+    if use_kernel:
+        from repro.kernels.bp_topk.ops import bp_topk_op
+        idx2, w2 = bp_topk_op(logits.reshape(G * Tg, E), bias, k)
+        idx = idx2.reshape(G, Tg, k)
+        w = w2.reshape(G, Tg, k)
+    else:
+        sel = probs - bias[None, None, :]
+        _, idx = jax.lax.top_k(sel, k)                      # [G, Tg, k]
+        w = jnp.take_along_axis(probs, idx, axis=-1)
+        w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+
+    counts = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(1.0)
+    H_new = jnp.maximum(router_state.H + jax.lax.stop_gradient(counts)
+                        - cap_step, 0.0)
+    new_state = RouterState(H=H_new, steps=router_state.steps + 1)
+
+    if cfg.router == "aux":
+        f = counts / jnp.maximum(counts.sum(), 1.0)
+        pbar = probs.mean(axis=(0, 1))
+        aux = 0.01 * E * jnp.sum(jax.lax.stop_gradient(f) * pbar)
+    else:
+        aux = jnp.zeros((), jnp.float32)
+    return idx, w.astype(x_flat.dtype), new_state, aux, counts
+
+
+def moe_ffn(cfg, p: dict, x: jax.Array, router_state: RouterState,
+            *, group_size: int | None = None, dropless: bool = False,
+            ep_in=None, ep_out=None) -> Tuple[jax.Array, RouterState, jax.Array]:
+    """x: [B, S, d] -> (y, new_router_state, aux_loss).
+
+    Groups default to one-per-sequence (G=B, Tg=S) — always divisible and
+    sharded over the DP axes.  dropless=True sizes expert buffers to the
+    worst case (decode-time behaviour: batches are tiny, so capacity = all
+    tokens)."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    if group_size is None:
+        G, Tg = B, S
+    else:
+        Tg = min(group_size, T)
+        G = T // Tg
+    assert G * Tg == T, (T, Tg)
+    xf = x.reshape(G, Tg, d)
+
+    idx, w, new_state, aux, _ = _route(cfg, p, xf, router_state)
+
+    if dropless:
+        cap = Tg
+    else:
+        cap = max(int(math.ceil(Tg * k / E * cfg.capacity_factor)), 1)
+    tk = Tg * k
+    e_flat = idx.reshape(G, tk)
+    t_flat = jnp.broadcast_to(jnp.arange(Tg)[:, None], (Tg, k)).reshape(tk)
+    w_flat = w.reshape(G, tk)
+
+    order = jnp.argsort(e_flat, axis=-1, stable=True)       # [G, tk]
+    e_sorted = jnp.take_along_axis(e_flat, order, axis=-1)
+    t_sorted = t_flat[order]                                # [G, tk]
+    w_sorted = jnp.take_along_axis(w_flat, order, axis=-1)
+
+    # rank within expert: arange - start offset of that expert
+    starts = jax.vmap(lambda es: jnp.searchsorted(es, jnp.arange(E),
+                                                  side="left"))(e_sorted)
+    pos = jnp.arange(tk)[None, :] - jnp.take_along_axis(
+        starts, e_sorted, axis=-1)                          # [G, tk]
+    slot = jnp.where(pos < cap, e_sorted * cap + pos, E * cap)  # overflow sink
+
+    # dispatch: scatter tokens into [G, E*cap(+1), d].  All gathers/scatters
+    # are vmapped per-group row ops — index arrays stay [tk]-shaped, so the
+    # SPMD partitioner keeps everything sharded on G (take_along_axis-style
+    # d-broadcast u32[G,tk,d] indices would force full replication).
+    xg = jax.vmap(lambda xrow, t: xrow[t])(xf, t_sorted)    # [G, tk, d]
+    if ep_out is not None:
+        xg = ep_out(xg)
+    # scatter stays LOCAL per data shard (G sharded, E replicated) ...
+    buf = jax.vmap(
+        lambda s, xr: jnp.zeros((E * cap + 1, d), x.dtype).at[s].set(xr)
+    )(slot, xg)
+    if ep_out is not None:
+        buf = ep_out(buf)
+    X = buf[:, : E * cap].reshape(G, E, cap, d)
+    if ep_in is not None:
+        X = ep_in(X)        # ... then reshard E -> 'model' (the dispatch a2a)
+
+    dt = x.dtype
+    g = jnp.einsum("gecd,edf->gecf", X, p["gate"].astype(dt))
+    u = jnp.einsum("gecd,edf->gecf", X, p["up"].astype(dt))
+    Y = jnp.einsum("gecf,efd->gecd", jax.nn.silu(g) * u, p["down"].astype(dt))
+    if ep_out is not None:
+        Y = ep_out(Y)       # reshard back (combine a2a) so gathers are local
+
+    # combine: gather back per assignment, weight, scatter-add per token
+    Yflat = jnp.concatenate(
+        [Y.reshape(G, E * cap, d), jnp.zeros((G, 1, d), dt)], axis=1)
+    gathered = jax.vmap(lambda yrow, s: yrow[s])(Yflat, slot)   # [G, tk, d]
+    vals = gathered * w_sorted[..., None]
+    if ep_out is not None:
+        vals = ep_out(vals)
+    out = jax.vmap(
+        lambda t, vr: jnp.zeros((Tg, d), dt).at[t].add(vr))(t_sorted, vals)
+    if ep_out is not None:
+        out = ep_out(out)
+    return out.reshape(B, S, d), new_state, aux

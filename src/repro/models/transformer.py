@@ -1,0 +1,307 @@
+"""Decoder-only transformer stack (dense + MoE + local/global patterns).
+
+Layer params are *stacked* ([L, ...] leading dims) and the stack runs under
+`lax.scan`, so HLO size is O(1) in depth and per-layer remat composes with
+XLA's latency-hiding scheduler.  Gemma-style k-local:1-global patterns use a
+nested scan over [groups, k] stacks plus an unrolled tail.
+
+Router virtual queues (backpressure MoE, core/router.py) are threaded
+through the scan as per-layer state: H [L, E].
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime.flags import layer_scan
+
+from repro.runtime.sharding import constrain
+from .attention import (KVCache, attention, decode_attention, init_attn,
+                        init_cache)
+from .common import (Init, cross_entropy, embed, init_embedding, init_mlp,
+                     init_norm, norm, swiglu, unembed)
+from .moe import init_moe, moe_ffn
+
+
+class ModelState(NamedTuple):
+    """Non-parameter model state: per-MoE-layer router queues H."""
+    router_H: Optional[jax.Array]    # [L_moe, E] or None
+
+
+def _remat(fn, mode: str):
+    if mode == "none":
+        return fn
+    if mode == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)        # "full": save only layer inputs
+
+
+# ---------------------------------------------------------------------------
+# One block
+# ---------------------------------------------------------------------------
+
+def init_block(cfg, ini: Init, *, moe: bool) -> dict:
+    p = {
+        "ln1": init_norm(cfg, ini, cfg.d_model),
+        "attn": init_attn(cfg, ini),
+        "ln2": init_norm(cfg, ini, cfg.d_model),
+    }
+    if moe:
+        p["moe"] = init_moe(cfg, ini)
+    else:
+        p["mlp"] = init_mlp(cfg, ini)
+    p = {k: v for k, v in p.items() if v is not None}
+    return p
+
+
+def block_fwd(cfg, p: dict, x, positions, *, window, router_H=None,
+              causal: bool = True):
+    """x: [B, S, d] -> (x', router_H')."""
+    h = norm(cfg, x, p.get("ln1"))
+    h = attention(cfg, p["attn"], h, positions, window=window, causal=causal)
+    x = x + h
+    x = constrain(x, ("act_batch", "act_seq", "act_embed"))
+    h = norm(cfg, x, p.get("ln2"))
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in p:
+        from repro.core.router import RouterState
+        rs = RouterState(H=router_H, steps=jnp.zeros((), jnp.int32))
+        h, rs_new, aux = moe_ffn(
+            cfg, p["moe"], h, rs,
+            ep_in=lambda t: constrain(
+                t, ("act_group", "act_experts") + (None,) * (t.ndim - 2)),
+            ep_out=lambda t: constrain(
+                t, ("act_group",) + (None,) * (t.ndim - 1)))
+        router_H = rs_new.H
+    else:
+        h = swiglu(h, p["mlp"]["gate"], p["mlp"]["up"], p["mlp"]["down"])
+    x = x + h
+    x = constrain(x, ("act_batch", "act_seq", "act_embed"))
+    return x, router_H, aux
+
+
+def block_decode(cfg, p: dict, x, cache: KVCache, *, window, router_H=None):
+    h = norm(cfg, x, p.get("ln1"))
+    h, cache = decode_attention(cfg, p["attn"], h, cache, window=window)
+    x = x + h
+    h = norm(cfg, x, p.get("ln2"))
+    if "moe" in p:
+        from repro.core.router import RouterState
+        rs = RouterState(H=router_H, steps=jnp.zeros((), jnp.int32))
+        h, rs_new, _ = moe_ffn(cfg, p["moe"], h, rs, group_size=x.shape[0],
+                               dropless=True)
+        router_H = rs_new.H
+    else:
+        h = swiglu(h, p["mlp"]["gate"], p["mlp"]["up"], p["mlp"]["down"])
+    return x + h, cache, router_H
+
+
+# ---------------------------------------------------------------------------
+# Stacks
+# ---------------------------------------------------------------------------
+
+def _pattern(cfg):
+    """(n_groups, k_local, tail) for the k-local:1-global pattern."""
+    if not cfg.local_global:
+        return 0, 0, 0
+    k = cfg.local_global
+    n_groups = cfg.n_layers // (k + 1)
+    tail = cfg.n_layers - n_groups * (k + 1)
+    return n_groups, k, tail
+
+
+def init_stack(cfg, ini: Init) -> dict:
+    moe = cfg.family == "moe"
+    if cfg.local_global:
+        n_groups, k, tail = _pattern(cfg)
+        p = {
+            "local": init_block(cfg, ini.stacked(n_groups, k), moe=moe),
+            "global": init_block(cfg, ini.stacked(n_groups), moe=moe),
+        }
+        if tail:
+            p["tail"] = init_block(cfg, ini.stacked(tail), moe=moe)
+        return p
+    return {"layers": init_block(cfg, ini.stacked(cfg.n_layers), moe=moe)}
+
+
+def init_model_state(cfg) -> ModelState:
+    if cfg.family == "moe":
+        return ModelState(router_H=jnp.zeros((cfg.n_layers, cfg.n_experts),
+                                             jnp.float32))
+    return ModelState(router_H=None)
+
+
+def stack_fwd(cfg, p: dict, x, positions, *, remat: str = "full",
+              scan_layers: bool = True, router_H=None):
+    """Run all blocks; returns (x, router_H', aux_total)."""
+
+    def scan_blocks(x, stacked, window, H_stack):
+        body = _remat(
+            functools.partial(block_fwd, cfg, window=window), remat)
+
+        def f(carry, xs):
+            x, aux = carry
+            lp, H = xs
+            x, H_new, a = body(lp, x, positions, router_H=H)
+            return (x, aux + a), H_new
+
+        (x, aux), H_out = layer_scan(f, (x, jnp.zeros((), jnp.float32)),
+                                     (stacked, H_stack))
+        return x, H_out, aux
+
+    aux_total = jnp.zeros((), jnp.float32)
+    if cfg.local_global:
+        n_groups, k, tail = _pattern(cfg)
+        H = None  # dense archs only use this pattern here
+
+        def group(x, xs):
+            lp_local, lp_global = xs
+            x, _, _ = scan_blocks(x, lp_local, cfg.window, None)
+            body = _remat(functools.partial(block_fwd, cfg, window=None), remat)
+            x, _, _ = body(lp_global, x, positions, router_H=None)
+            return x, None
+
+        x, _ = layer_scan(group, x, (p["local"], p["global"]))
+        if "tail" in p:
+            x, _, _ = scan_blocks(x, p["tail"], cfg.window, None)
+        return x, router_H, aux_total
+
+    if cfg.family == "moe":
+        x, H_out, aux_total = scan_blocks(x, p["layers"], cfg.window, router_H)
+        return x, H_out, aux_total
+    x, _, aux_total = scan_blocks(x, p["layers"], cfg.window, None)
+    return x, router_H, aux_total
+
+
+# ---------------------------------------------------------------------------
+# LM wrapper: init / loss / decode
+# ---------------------------------------------------------------------------
+
+def init_lm(cfg, key=None, dtype=jnp.float32, abstract: bool = False) -> dict:
+    ini = Init(key=key, dtype=dtype, abstract=abstract)
+    return {
+        "embed": init_embedding(cfg, ini),
+        "stack": init_stack(cfg, ini),
+        "ln_f": init_norm(cfg, ini, cfg.d_model),
+    }
+
+
+def lm_logits(cfg, params, tokens, *, activ_dtype=jnp.bfloat16,
+              remat="full", router_H=None, prefix_embeds=None,
+              last_only=False):
+    """tokens: [B, S] -> (logits [B, S(+P), V], router_H').  last_only=True
+    unembeds only the final position (serving prefill)."""
+    x = embed(cfg, params["embed"], tokens, activ_dtype)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(activ_dtype), x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x = constrain(x, ("act_batch", "act_seq", "act_embed"))
+    x, H_out, aux = stack_fwd(cfg, params["stack"], x, positions,
+                              remat=remat, router_H=router_H)
+    x = norm(cfg, x, params["ln_f"] if "ln_f" in params else None)
+    if last_only:
+        x = x[:, -1:]
+    logits = unembed(cfg, params["embed"], x)
+    return logits, H_out, aux
+
+
+def lm_loss(cfg, params, batch, *, activ_dtype=jnp.bfloat16, remat="full",
+            router_H=None):
+    """batch: {tokens [B, S]} -> (scalar loss, (router_H', metrics))."""
+    tokens = batch["tokens"]
+    logits, H_out, aux = lm_logits(cfg, params, tokens[:, :-1],
+                                   activ_dtype=activ_dtype, remat=remat,
+                                   router_H=router_H)
+    ce = cross_entropy(logits, tokens[:, 1:],
+                       batch.get("mask", None))
+    return ce + aux, (H_out, {"ce": ce, "aux": aux})
+
+
+# ---- decode -----------------------------------------------------------------
+
+def init_decode_caches(cfg, batch: int, max_len: int, dtype,
+                       abstract: bool = False):
+    """Stacked caches mirroring the stack structure."""
+    mk = functools.partial(init_cache, cfg, batch, max_len, dtype,
+                           abstract=abstract)
+
+    def stacked(prefix, window=None):
+        c = mk(window=window)
+        def expand(a):
+            if abstract:
+                return jax.ShapeDtypeStruct(prefix + a.shape, a.dtype)
+            return jnp.broadcast_to(a[(None,) * len(prefix)], prefix + a.shape)
+        return jax.tree_util.tree_map(expand, c)
+
+    if cfg.local_global:
+        n_groups, k, tail = _pattern(cfg)
+        caches = {
+            "local": stacked((n_groups, k), window=cfg.window),
+            "global": stacked((n_groups,)),
+        }
+        if tail:
+            caches["tail"] = stacked((tail,), window=cfg.window)
+        return caches
+    return {"layers": stacked((cfg.n_layers,), window=cfg.window)}
+
+
+def cache_axes(tree):
+    """Logical axes for a (possibly stacked) cache tree."""
+    def one(c: KVCache):
+        pre = ("layers",) * (c.k.ndim - 4)
+        kv = pre + ("cache_batch", "cache_seq", "act_kv_heads", None)
+        return KVCache(k=kv, v=kv, kpos=pre + ("cache_seq",), pos=pre)
+    return jax.tree_util.tree_map(one, tree,
+                                  is_leaf=lambda x: isinstance(x, KVCache))
+
+
+def lm_decode_step(cfg, params, caches, tokens, *, activ_dtype=jnp.bfloat16,
+                   router_H=None, prefix_embeds=None):
+    """tokens: [B] int32 -> (logits [B, V], new caches)."""
+    x = embed(cfg, params["embed"], tokens[:, None], activ_dtype)
+    stack = params["stack"]
+
+    def scan_dec(x, stacked, caches, window, H_stack=None):
+        if H_stack is None:
+            def f(x, xs):
+                lp, c = xs
+                x, c, _ = block_decode(cfg, lp, x, c, window=window)
+                return x, c
+            return layer_scan(f, x, (stacked, caches))
+
+        def f(x, xs):
+            lp, c, H = xs
+            x, c, _ = block_decode(cfg, lp, x, c, window=window, router_H=H)
+            return x, c
+        return layer_scan(f, x, (stacked, caches, H_stack))
+
+    if cfg.local_global:
+        def group(x, xs):
+            lp_l, lp_g, c_l, c_g = xs
+            x, c_l = scan_dec(x, lp_l, c_l, cfg.window)
+            x, c_g, _ = block_decode(cfg, lp_g, x, c_g, window=None)
+            return x, (c_l, c_g)
+        x, (c_local, c_global) = layer_scan(
+            group, x, (stack["local"], stack["global"],
+                       caches["local"], caches["global"]))
+        new_caches = {"local": c_local, "global": c_global}
+        if "tail" in stack:
+            x, c_tail = scan_dec(x, stack["tail"], caches["tail"], cfg.window)
+            new_caches["tail"] = c_tail
+    elif cfg.family == "moe":
+        x, new_layers = scan_dec(x, stack["layers"], caches["layers"],
+                                 cfg.window, H_stack=router_H)
+        new_caches = {"layers": new_layers}
+    else:
+        x, new_layers = scan_dec(x, stack["layers"], caches["layers"],
+                                 cfg.window)
+        new_caches = {"layers": new_layers}
+
+    x = norm(cfg, x, params.get("ln_f"))
+    logits = unembed(cfg, params["embed"], x)[:, 0, :]
+    return logits, new_caches

@@ -1,0 +1,60 @@
+"""Vision-prefix VLM (internvl2): InternViT frontend is a STUB — the
+assignment supplies precomputed patch embeddings via input_specs(); a
+learned 2-layer projector maps them into the LM embedding space, then the
+qwen2-shaped LM backbone runs with the image prefix.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import Init, cross_entropy, init_norm
+from . import transformer as tfm
+
+
+def init_lm(cfg, key=None, dtype=jnp.float32, abstract=False) -> dict:
+    ini = Init(key=key, dtype=dtype, abstract=abstract)
+    p = tfm.init_lm(cfg, key=ini._next() if not abstract else None,
+                    dtype=dtype, abstract=abstract)
+    p["projector"] = {
+        "ln": init_norm(cfg, ini, cfg.d_model),
+        "w1": ini.param((cfg.d_model, cfg.d_model), ("embed", "ff")),
+        "w2": ini.param((cfg.d_model, cfg.d_model), ("ff", "embed")),
+    }
+    return p
+
+
+def _project(cfg, p, patches, dtype):
+    from .common import norm
+    x = patches.astype(dtype)
+    x = norm(cfg, x, p["projector"]["ln"])
+    x = jax.nn.gelu(jnp.einsum("bpd,de->bpe", x,
+                               p["projector"]["w1"].astype(dtype)))
+    return jnp.einsum("bpe,ed->bpd", x, p["projector"]["w2"].astype(dtype))
+
+
+def lm_loss(cfg, params, batch, *, activ_dtype=jnp.bfloat16, remat="full",
+            router_H=None):
+    """batch: {patch_embeds [B, P, d], tokens [B, S_text]}."""
+    prefix = _project(cfg, params, batch["patch_embeds"], activ_dtype)
+    tokens = batch["tokens"]
+    logits, H_out, aux = tfm.lm_logits(
+        cfg, params, tokens[:, :-1], activ_dtype=activ_dtype, remat=remat,
+        router_H=router_H, prefix_embeds=prefix)
+    P = prefix.shape[1]
+    ce = cross_entropy(logits[:, P:], tokens[:, 1:])   # loss on text only
+    return ce, (H_out, {"ce": ce})
+
+
+def lm_logits(cfg, params, batch, *, activ_dtype=jnp.bfloat16, remat="full",
+              router_H=None, last_only=False):
+    prefix = _project(cfg, params, batch["patch_embeds"], activ_dtype)
+    return tfm.lm_logits(cfg, params, batch["tokens"],
+                         activ_dtype=activ_dtype, remat=remat,
+                         router_H=router_H, prefix_embeds=prefix,
+                         last_only=last_only)
+
+
+init_decode_caches = tfm.init_decode_caches
+cache_axes = tfm.cache_axes
+lm_decode_step = tfm.lm_decode_step      # decode: prefix already in cache

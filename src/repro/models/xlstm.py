@@ -1,0 +1,374 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallel quadratic train form,
+O(1) recurrent decode) and sLSTM (scalar memory with exponential gating and
+block-diagonal recurrence; sequential scan).
+
+Pattern: one sLSTM per `slstm_every` blocks (rest mLSTM); nested scan like
+the gemma local:global pattern.  d_ff = 0 in the arch spec — blocks carry
+their own up/down projections (mLSTM PF=2, sLSTM post-MLP PF=4/3).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime.flags import layer_scan
+import numpy as np
+
+from .common import Init, init_norm, norm
+
+
+def _dims(cfg):
+    d = cfg.d_model
+    d_in = 2 * d                       # mLSTM projection factor 2
+    nh = cfg.n_heads
+    hd = d_in // nh
+    return d, d_in, nh, hd
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+class MLSTMState(NamedTuple):
+    C: jax.Array      # [B, nh, hd, hd] matrix memory
+    n: jax.Array      # [B, nh, hd] normalizer
+    m: jax.Array      # [B, nh] stabilizer
+
+
+def init_mlstm(cfg, ini: Init) -> dict:
+    d, d_in, nh, hd = _dims(cfg)
+    return {
+        "ln": init_norm(cfg, ini, d),
+        "wup": ini.param((d, 2 * d_in), ("embed", "dinner")),
+        "wq": ini.param((d_in, nh, hd), ("dinner", "ssm_heads", None)),
+        "wk": ini.param((d_in, nh, hd), ("dinner", "ssm_heads", None)),
+        "wv": ini.param((d_in, nh, hd), ("dinner", "ssm_heads", None)),
+        "wi": ini.param((d_in, nh), ("dinner", "ssm_heads"), scale=0.02),
+        "bi": ini.param((nh,), ("ssm_heads",), kind="zeros"),
+        "wf": ini.param((d_in, nh), ("dinner", "ssm_heads"), scale=0.02),
+        "bf": ini.param((nh,), ("ssm_heads",), kind="ones"),
+        "gamma": ini.param((d_in,), ("dinner",), kind="zeros"),
+        "wdown": ini.param((d_in, d), ("dinner", "embed")),
+    }
+
+
+def _mlstm_project(p, xin):
+    dt = xin.dtype
+    q = jnp.einsum("bsd,dhk->bshk", xin, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", xin, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", xin, p["wv"].astype(dt))
+    i = jnp.einsum("bsd,dh->bsh", xin, p["wi"].astype(dt)).astype(jnp.float32) \
+        + p["bi"].astype(jnp.float32)
+    f = jnp.einsum("bsd,dh->bsh", xin, p["wf"].astype(dt)).astype(jnp.float32) \
+        + p["bf"].astype(jnp.float32)
+    return q, k, v, i, f
+
+
+def _headnorm(y, gamma, B, S, d_in):
+    """Per-head RMS norm then channel scale (xLSTM group norm)."""
+    yf = y.astype(jnp.float32)
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)
+    yf = yf.reshape(B, S, d_in)
+    return yf * (1.0 + gamma.astype(jnp.float32))
+
+
+def mlstm_fwd(cfg, p: dict, x: jax.Array) -> jax.Array:
+    """Parallel (train/prefill) form; x [B, S, d].
+
+    Under context parallelism (runtime.flags.ctx_par) the query/time dim of
+    the quadratic decay matrix is sharded over the model axis — with only 4
+    heads the head dim cannot use it, and the [B,t,s,nh] tensors would
+    otherwise be replicated 16x."""
+    from repro.runtime import flags as _flags
+    from repro.runtime.sharding import constrain
+    B, S, d = x.shape
+    _, d_in, nh, hd = _dims(cfg)
+    h = norm(cfg, x, p["ln"])
+    up = jnp.einsum("bsd,de->bse", h, p["wup"].astype(h.dtype))
+    xin, z = jnp.split(up, 2, axis=-1)
+    q, k, v, i, f = _mlstm_project(p, xin)
+    if _flags.ctx_par():
+        q = constrain(q, ("act_batch", "act_seq_ctx", None, None))
+
+    logsig_f = -jax.nn.softplus(-f)                       # log sigmoid(f)
+    Fc = jnp.cumsum(logsig_f, axis=1)                     # [B,S,nh]
+    Fc_t = constrain(Fc, ("act_batch", "act_seq_ctx", None)) \
+        if _flags.ctx_par() else Fc
+    D = Fc_t[:, :, None, :] - Fc[:, None, :, :] + i[:, None, :, :]
+    tri = jnp.tril(jnp.ones((S, S), bool))[None, :, :, None]
+    D = jnp.where(tri, D, -jnp.inf)                       # [B,t,s,nh]
+    m = jnp.max(D, axis=2)                                # [B,t,nh]
+    w = jnp.exp(D - m[:, :, None, :])
+    scores = jnp.einsum("bthk,bshk->btsh", q, k) / np.sqrt(hd)
+    scores = scores.astype(jnp.float32) * w
+    denom = jnp.maximum(jnp.abs(scores.sum(axis=2)), jnp.exp(-m))   # [B,t,nh]
+    y = jnp.einsum("btsh,bshk->bthk", scores.astype(v.dtype), v)
+    y = y / denom[..., None].astype(v.dtype)
+    if _flags.ctx_par():
+        y = constrain(y, ("act_batch", "act_seq_ctx", None, None))
+    y = _headnorm(y, p["gamma"], B, S, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return x + jnp.einsum("bse,ed->bsd", y, p["wdown"].astype(x.dtype))
+
+
+def init_mlstm_state(cfg, batch, dtype, abstract=False) -> MLSTMState:
+    _, d_in, nh, hd = _dims(cfg)
+    shapes = ((batch, nh, hd, hd), (batch, nh, hd), (batch, nh))
+    if abstract:
+        return MLSTMState(*[jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes])
+    return MLSTMState(*[jnp.zeros(s, jnp.float32) for s in shapes])
+
+
+def mlstm_decode(cfg, p: dict, x: jax.Array,
+                 st: MLSTMState) -> Tuple[jax.Array, MLSTMState]:
+    B = x.shape[0]
+    _, d_in, nh, hd = _dims(cfg)
+    h = norm(cfg, x, p["ln"])
+    up = jnp.einsum("bsd,de->bse", h, p["wup"].astype(h.dtype))
+    xin, z = jnp.split(up, 2, axis=-1)
+    q, k, v, i, f = _mlstm_project(p, xin)
+    q, k, v = (t[:, 0].astype(jnp.float32) for t in (q, k, v))  # [B,nh,hd]
+    i, f = i[:, 0], f[:, 0]                                     # [B,nh]
+
+    logsig_f = -jax.nn.softplus(-f)
+    m_new = jnp.maximum(logsig_f + st.m, i)
+    a = jnp.exp(logsig_f + st.m - m_new)[:, :, None]
+    b = jnp.exp(i - m_new)[:, :, None]
+    C = st.C * a[..., None] + b[..., None] * k[..., :, None] * v[..., None, :]
+    n = st.n * a + b * k
+    qs = q / np.sqrt(hd)
+    num = jnp.einsum("bhk,bhkv->bhv", qs, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qs, n)),
+                      jnp.exp(-m_new))
+    y = (num / den[..., None]).astype(x.dtype)[:, None]         # [B,1,nh,hd]? -> reshape
+    y = _headnorm(y.reshape(B, 1, nh, hd), p["gamma"], B, 1, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = x + jnp.einsum("bse,ed->bsd", y, p["wdown"].astype(x.dtype))
+    return out, MLSTMState(C=C, n=n, m=m_new)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+class SLSTMState(NamedTuple):
+    c: jax.Array      # [B, d]
+    n: jax.Array      # [B, d]
+    hprev: jax.Array  # [B, d]
+    m: jax.Array      # [B, d]
+
+
+def init_slstm(cfg, ini: Init) -> dict:
+    d = cfg.d_model
+    nh = cfg.n_heads
+    hd = d // nh
+    ffs = int(np.ceil(4 * d / 3 / 128) * 128)
+    p = {"ln": init_norm(cfg, ini, d),
+         "ln_mlp": init_norm(cfg, ini, d),
+         "up": ini.param((d, ffs), ("embed", "ff")),
+         "down": ini.param((ffs, d), ("ff", "embed"))}
+    for g in ("i", "f", "z", "o"):
+        p[f"w{g}"] = ini.param((d, d), ("embed", None), scale=0.02)
+        p[f"r{g}"] = ini.param((nh, hd, hd), ("ssm_heads", None, None),
+                               scale=0.02)
+        p[f"b{g}"] = ini.param((d,), (None,),
+                               kind="ones" if g == "f" else "zeros")
+    return p
+
+
+def _slstm_cell(cfg, p, xt, st: SLSTMState) -> Tuple[jax.Array, SLSTMState]:
+    """One timestep; xt [B, d] f32."""
+    d = cfg.d_model
+    nh = cfg.n_heads
+    hd = d // nh
+    B = xt.shape[0]
+    hp = st.hprev.reshape(B, nh, hd)
+
+    def gate(g):
+        rec = jnp.einsum("bhk,hkl->bhl", hp, p[f"r{g}"].astype(jnp.float32))
+        return (xt @ p[f"w{g}"].astype(jnp.float32) + rec.reshape(B, d)
+                + p[f"b{g}"].astype(jnp.float32))
+
+    i, f, z, o = gate("i"), gate("f"), gate("z"), gate("o")
+    logsig_f = -jax.nn.softplus(-f)
+    m_new = jnp.maximum(logsig_f + st.m, i)
+    fi = jnp.exp(logsig_f + st.m - m_new)
+    ii = jnp.exp(i - m_new)
+    c = fi * st.c + ii * jnp.tanh(z)
+    n = fi * st.n + ii
+    h = jax.nn.sigmoid(o) * c / jnp.maximum(n, 1e-6)
+    return h, SLSTMState(c=c, n=n, hprev=h, m=m_new)
+
+
+def slstm_fwd(cfg, p: dict, x: jax.Array) -> jax.Array:
+    """Sequential over time; x [B, S, d]."""
+    B, S, d = x.shape
+    h0 = norm(cfg, x, p["ln"]).astype(jnp.float32)
+
+    def step(st, xt):
+        h, st = _slstm_cell(cfg, p, xt, st)
+        return st, h
+
+    st = init_slstm_state(cfg, B, x.dtype)
+    _, hs = jax.lax.scan(step, st, h0.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2).astype(x.dtype)
+    x = x + y
+    # post-MLP (PF 4/3)
+    h = norm(cfg, x, p["ln_mlp"])
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", h, p["up"].astype(x.dtype)))
+    return x + jnp.einsum("bsf,fd->bsd", h, p["down"].astype(x.dtype))
+
+
+def init_slstm_state(cfg, batch, dtype, abstract=False) -> SLSTMState:
+    d = cfg.d_model
+    if abstract:
+        return SLSTMState(*[jax.ShapeDtypeStruct((batch, d), jnp.float32)
+                            for _ in range(4)])
+    return SLSTMState(*[jnp.zeros((batch, d), jnp.float32) for _ in range(4)])
+
+
+def slstm_decode(cfg, p, x, st: SLSTMState):
+    B = x.shape[0]
+    h0 = norm(cfg, x, p["ln"]).astype(jnp.float32)[:, 0]
+    h, st = _slstm_cell(cfg, p, h0, st)
+    x = x + h.astype(x.dtype)[:, None]
+    hh = norm(cfg, x, p["ln_mlp"])
+    hh = jax.nn.gelu(jnp.einsum("bsd,df->bsf", hh, p["up"].astype(x.dtype)))
+    return x + jnp.einsum("bsf,fd->bsd", hh, p["down"].astype(x.dtype)), st
+
+
+# ---------------------------------------------------------------------------
+# Stack + LM wrappers
+# ---------------------------------------------------------------------------
+
+def _groups(cfg):
+    k = cfg.slstm_every
+    n_groups = cfg.n_layers // k
+    assert n_groups * k == cfg.n_layers
+    return n_groups, k - 1          # per group: (k-1) mLSTM + 1 sLSTM
+
+
+def init_lm(cfg, key=None, dtype=jnp.float32, abstract=False) -> dict:
+    from .common import init_embedding
+    ini = Init(key=key, dtype=dtype, abstract=abstract)
+    n_groups, km = _groups(cfg)
+    return {
+        "embed": init_embedding(cfg, ini),
+        "stack": {"mlstm": init_mlstm(cfg, ini.stacked(n_groups, km)),
+                  "slstm": init_slstm(cfg, ini.stacked(n_groups))},
+        "ln_f": init_norm(cfg, ini, cfg.d_model),
+    }
+
+
+def stack_fwd(cfg, p, x, *, remat="full"):
+    m_fwd = functools.partial(mlstm_fwd, cfg)
+    s_fwd = functools.partial(slstm_fwd, cfg)
+    if remat != "none":
+        m_fwd = jax.checkpoint(m_fwd)
+        s_fwd = jax.checkpoint(s_fwd)
+
+    def group(x, xs):
+        lp_m, lp_s = xs
+
+        def inner(x, lp):
+            return m_fwd(lp, x), None
+
+        x, _ = layer_scan(inner, x, lp_m)
+        return s_fwd(lp_s, x), None
+
+    x, _ = layer_scan(group, x, (p["mlstm"], p["slstm"]))
+    return x
+
+
+def lm_loss(cfg, params, batch, *, activ_dtype=jnp.bfloat16, remat="full",
+            router_H=None):
+    from .common import cross_entropy, embed, unembed
+    tokens = batch["tokens"]
+    x = embed(cfg, params["embed"], tokens[:, :-1], activ_dtype)
+    x = stack_fwd(cfg, params["stack"], x, remat=remat)
+    x = norm(cfg, x, params["ln_f"])
+    logits = unembed(cfg, params["embed"], x)
+    ce = cross_entropy(logits, tokens[:, 1:])
+    return ce, (router_H, {"ce": ce})
+
+
+def lm_logits(cfg, params, tokens, *, activ_dtype=jnp.bfloat16, remat="full",
+              router_H=None, prefix_embeds=None, last_only=False):
+    from .common import embed, unembed
+    x = embed(cfg, params["embed"], tokens, activ_dtype)
+    x = stack_fwd(cfg, params["stack"], x, remat=remat)
+    x = norm(cfg, x, params["ln_f"])
+    if last_only:
+        x = x[:, -1:]
+    return unembed(cfg, params["embed"], x), router_H, jnp.zeros((), jnp.float32)
+
+
+class XLSTMCache(NamedTuple):
+    mlstm: MLSTMState      # stacked [n_groups, km]
+    slstm: SLSTMState      # stacked [n_groups]
+
+
+def init_decode_caches(cfg, batch, max_len, dtype, abstract=False):
+    n_groups, km = _groups(cfg)
+
+    def expand(prefix, tree):
+        def one(a):
+            if abstract:
+                return jax.ShapeDtypeStruct(prefix + a.shape, a.dtype)
+            return jnp.broadcast_to(a[(None,) * len(prefix)], prefix + a.shape)
+        return jax.tree_util.tree_map(one, tree)
+
+    return XLSTMCache(
+        mlstm=expand((n_groups, km), init_mlstm_state(cfg, batch, dtype,
+                                                      abstract=abstract)),
+        slstm=expand((n_groups,), init_slstm_state(cfg, batch, dtype,
+                                                   abstract=abstract)),
+    )
+
+
+def cache_axes(tree: XLSTMCache):
+    def m_ax(s: MLSTMState):
+        pre = ("layers",) * (s.C.ndim - 4)
+        return MLSTMState(C=pre + ("cache_batch", "ssm_heads", None, None),
+                          n=pre + ("cache_batch", "ssm_heads", None),
+                          m=pre + ("cache_batch", "ssm_heads"))
+
+    def s_ax(s: SLSTMState):
+        pre = ("layers",) * (s.c.ndim - 2)
+        a = pre + ("cache_batch", "act_embed")
+        return SLSTMState(c=a, n=a, hprev=a, m=a)
+
+    return XLSTMCache(
+        mlstm=jax.tree_util.tree_map(
+            m_ax, tree.mlstm, is_leaf=lambda x: isinstance(x, MLSTMState)),
+        slstm=jax.tree_util.tree_map(
+            s_ax, tree.slstm, is_leaf=lambda x: isinstance(x, SLSTMState)),
+    )
+
+
+def lm_decode_step(cfg, params, caches: XLSTMCache, tokens, *,
+                   activ_dtype=jnp.bfloat16, router_H=None):
+    from .common import embed, unembed
+    x = embed(cfg, params["embed"], tokens[:, None], activ_dtype)
+
+    def group(x, xs):
+        lp_m, lp_s, st_m, st_s = xs
+
+        def inner(x, xs2):
+            lp, st = xs2
+            x, st = mlstm_decode(cfg, lp, x, st)
+            return x, st
+
+        x, st_m = layer_scan(inner, x, (lp_m, st_m))
+        x, st_s = slstm_decode(cfg, lp_s, x, st_s)
+        return x, (st_m, st_s)
+
+    x, (m_new, s_new) = layer_scan(
+        group, x, (params["stack"]["mlstm"], params["stack"]["slstm"],
+                   caches.mlstm, caches.slstm))
+    x = norm(cfg, x, params["ln_f"])
+    logits = unembed(cfg, params["embed"], x)[:, 0, :]
+    return logits, XLSTMCache(mlstm=m_new, slstm=s_new)

@@ -1,0 +1,151 @@
+"""Zamba2-style hybrid: Mamba2 backbone + ONE shared attention block applied
+every `attn_every` layers (shared weights, separate KV caches per
+application).  54 = 9 groups x 6 mamba layers here.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime.flags import layer_scan
+
+from .attention import init_cache, KVCache
+from .common import (Init, init_mlp, init_norm, norm, swiglu)
+from .mamba import (MambaState, init_mamba, init_mamba_state, mamba_decode,
+                    mamba_fwd, mamba_state_axes)
+from . import transformer as tfm
+
+
+def _groups(cfg):
+    k = cfg.attn_every
+    n_groups = cfg.n_layers // k
+    assert n_groups * k == cfg.n_layers, (cfg.n_layers, k)
+    return n_groups, k
+
+
+def init_stack(cfg, ini: Init) -> dict:
+    n_groups, k = _groups(cfg)
+    return {
+        "mamba": {"m": init_mamba(cfg, ini.stacked(n_groups, k)),
+                  "ln": init_norm(cfg, ini.stacked(n_groups, k), cfg.d_model)},
+        "shared": tfm.init_block(cfg, ini, moe=False),   # one shared attn block
+    }
+
+
+def init_lm(cfg, key=None, dtype=jnp.float32, abstract: bool = False) -> dict:
+    from .common import init_embedding
+    ini = Init(key=key, dtype=dtype, abstract=abstract)
+    return {
+        "embed": init_embedding(cfg, ini),
+        "stack": init_stack(cfg, ini),
+        "ln_f": init_norm(cfg, ini, cfg.d_model),
+    }
+
+
+def _mamba_layer(cfg, lp, x, remat):
+    def body(lp, x):
+        h = norm(cfg, x, lp["ln"])
+        return x + mamba_fwd(cfg, lp["m"], h)
+    if remat != "none":
+        body = jax.checkpoint(body)
+    return body(lp, x)
+
+
+def stack_fwd(cfg, p, x, positions, *, remat="full"):
+    n_groups, k = _groups(cfg)
+    shared = p["shared"]
+
+    def group(x, lp_group):
+        def inner(x, lp):
+            return _mamba_layer(cfg, lp, x, remat), None
+        x, _ = layer_scan(inner, x, lp_group)
+        x, _, _ = tfm.block_fwd(cfg, shared, x, positions, window=None)
+        return x, None
+
+    x, _ = layer_scan(group, x, p["mamba"])
+    return x
+
+
+def lm_loss(cfg, params, batch, *, activ_dtype=jnp.bfloat16, remat="full",
+            router_H=None):
+    from .common import cross_entropy, embed, unembed
+    tokens = batch["tokens"]
+    x = embed(cfg, params["embed"], tokens[:, :-1], activ_dtype)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x = stack_fwd(cfg, params["stack"], x, positions, remat=remat)
+    x = norm(cfg, x, params["ln_f"])
+    logits = unembed(cfg, params["embed"], x)
+    ce = cross_entropy(logits, tokens[:, 1:])
+    return ce, (router_H, {"ce": ce})
+
+
+def lm_logits(cfg, params, tokens, *, activ_dtype=jnp.bfloat16, remat="full",
+              router_H=None, prefix_embeds=None, last_only=False):
+    from .common import embed, unembed
+    x = embed(cfg, params["embed"], tokens, activ_dtype)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x = stack_fwd(cfg, params["stack"], x, positions, remat=remat)
+    x = norm(cfg, x, params["ln_f"])
+    if last_only:
+        x = x[:, -1:]
+    return unembed(cfg, params["embed"], x), router_H, jnp.zeros((), jnp.float32)
+
+
+class ZambaCache(NamedTuple):
+    ssm: MambaState          # stacked [n_groups, k]
+    attn: KVCache            # stacked [n_groups]
+
+
+def init_decode_caches(cfg, batch, max_len, dtype, abstract=False):
+    n_groups, k = _groups(cfg)
+
+    def expand(prefix, tree):
+        def one(a):
+            if abstract:
+                return jax.ShapeDtypeStruct(prefix + a.shape, a.dtype)
+            return jnp.broadcast_to(a[(None,) * len(prefix)], prefix + a.shape)
+        return jax.tree_util.tree_map(one, tree)
+
+    return ZambaCache(
+        ssm=expand((n_groups, k), init_mamba_state(cfg, batch, dtype,
+                                                   abstract=abstract)),
+        attn=expand((n_groups,), init_cache(cfg, batch, max_len, dtype,
+                                            abstract=abstract)),
+    )
+
+
+def cache_axes(tree: ZambaCache):
+    return ZambaCache(ssm=mamba_state_axes(tree.ssm),
+                      attn=tfm.cache_axes(tree.attn))
+
+
+def lm_decode_step(cfg, params, caches: ZambaCache, tokens, *,
+                   activ_dtype=jnp.bfloat16, router_H=None):
+    from .common import embed, unembed
+    x = embed(cfg, params["embed"], tokens[:, None], activ_dtype)
+    shared = params["stack"]["shared"]
+
+    def group(x, xs):
+        lp_group, ssm_group, attn_cache = xs
+
+        def inner(x, xs2):
+            lp, st = xs2
+            h = norm(cfg, x, lp["ln"])
+            h, st = mamba_decode(cfg, lp["m"], h, st)
+            return x + h, st
+
+        x, ssm_group = layer_scan(inner, x, (lp_group, ssm_group))
+        x, attn_cache, _ = tfm.block_decode(cfg, shared, x, attn_cache,
+                                            window=None)
+        return x, (ssm_group, attn_cache)
+
+    x, (ssm_new, attn_new) = layer_scan(
+        group, x, (params["stack"]["mamba"], caches.ssm, caches.attn))
+    x = norm(cfg, x, params["ln_f"])
+    logits = unembed(cfg, params["embed"], x)[:, 0, :]
+    return logits, ZambaCache(ssm=ssm_new, attn=attn_new)

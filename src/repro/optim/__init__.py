@@ -1,0 +1,7 @@
+from .adamw import AdamW, AdamWState, global_norm, warmup_cosine
+from .compression import (EFState, init_ef, init_ef_abstract,
+                          compress_int8_ef, compress_topk_ef)
+
+__all__ = ["AdamW", "AdamWState", "global_norm", "warmup_cosine", "EFState",
+           "init_ef", "init_ef_abstract", "compress_int8_ef",
+           "compress_topk_ef"]

@@ -1,0 +1,92 @@
+"""AdamW with global-norm clipping and warmup+cosine schedule (pure JAX,
+pytree-native; optimizer moments inherit the parameter shardings so FSDP
+shards optimizer state for free).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    count: jax.Array      # [] int32
+    m: object             # pytree like params (f32)
+    v: object             # pytree like params (f32)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(
+            count=jnp.zeros((), jnp.int32),
+            m=jax.tree.map(zeros, params),
+            v=jax.tree.map(zeros, params),
+        )
+
+    def init_abstract(self, params) -> AdamWState:
+        sds = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+        return AdamWState(
+            count=jax.ShapeDtypeStruct((), jnp.int32),
+            m=jax.tree.map(sds, params),
+            v=jax.tree.map(sds, params),
+        )
+
+    def _lr(self, count):
+        if callable(self.lr):
+            return self.lr(count)
+        return jnp.asarray(self.lr, jnp.float32)
+
+    def update(self, grads, state: AdamWState, params):
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if self.clip_norm:
+            gn = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gn, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        count = state.count + 1
+        b1, b2 = self.b1, self.b2
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state.m, grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state.v,
+                         grads)
+        c = count.astype(jnp.float32)
+        bc1 = 1 - b1 ** c
+        bc2 = 1 - b2 ** c
+        lr = self._lr(count)
+
+        def upd(p, m_, v_):
+            mh = m_ / bc1
+            vh = v_ / bc2
+            step = mh / (jnp.sqrt(vh) + self.eps)
+            if self.weight_decay:
+                step = step + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, AdamWState(count=count, m=m, v=v)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def warmup_cosine(peak: float, warmup: int, total: int,
+                  floor: float = 0.1) -> Callable:
+    def sched(count):
+        c = count.astype(jnp.float32)
+        warm = peak * c / max(warmup, 1)
+        frac = jnp.clip((c - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor * peak + (1 - floor) * peak * 0.5 * (
+            1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(c < warmup, warm, cos)
+    return sched

@@ -1,0 +1,108 @@
+"""Fault tolerance: straggler detection, heartbeat tracking, elastic
+re-mesh planning.
+
+At 1000+-node scale the failure model is: (i) slow hosts (thermal, network)
+-> detect via per-step timing statistics and rebalance/evict; (ii) dead
+hosts -> detect via heartbeat timeout -> rebuild a smaller mesh and restore
+from the last checkpoint (full-array checkpoints re-shard onto any mesh,
+checkpoint/checkpointer.py).  This module is pure control-plane logic so it
+is unit-testable on one host; the launcher wires it to real timers.
+
+The straggler policy is itself the paper's lesson: queue-length (backlog)
+based decisions beat static assignment — a host whose step-time queue grows
+is drained before it stalls the collective.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Dict, List, Optional
+
+
+@dataclasses.dataclass
+class StragglerConfig:
+    window: int = 32               # ring-buffer of recent step times
+    factor: float = 1.8            # median multiple considered "straggling"
+    patience: int = 8              # consecutive slow steps before action
+    heartbeat_timeout_s: float = 60.0
+
+
+class StragglerDetector:
+    """Per-host step-time ring buffers + median-factor rule."""
+
+    def __init__(self, hosts: List[str], cfg: StragglerConfig = StragglerConfig()):
+        self.cfg = cfg
+        self.times: Dict[str, deque] = {h: deque(maxlen=cfg.window)
+                                        for h in hosts}
+        self.slow_streak: Dict[str, int] = {h: 0 for h in hosts}
+        self.last_seen: Dict[str, float] = {h: time.time() for h in hosts}
+
+    def record(self, host: str, step_time: float,
+               now: Optional[float] = None) -> None:
+        self.times[host].append(step_time)
+        self.last_seen[host] = now if now is not None else time.time()
+
+    def _medians(self) -> Dict[str, float]:
+        meds = {}
+        for h, buf in self.times.items():
+            if buf:
+                s = sorted(buf)
+                meds[h] = s[len(s) // 2]
+        return meds
+
+    def stragglers(self) -> List[str]:
+        """Hosts whose median step time exceeds factor x fleet median."""
+        meds = self._medians()
+        if len(meds) < 2:
+            return []
+        fleet = sorted(meds.values())[len(meds) // 2]
+        out = []
+        for h, m in meds.items():
+            if m > self.cfg.factor * fleet:
+                self.slow_streak[h] += 1
+                if self.slow_streak[h] >= self.cfg.patience:
+                    out.append(h)
+            else:
+                self.slow_streak[h] = 0
+        return out
+
+    def dead(self, now: Optional[float] = None) -> List[str]:
+        now = now if now is not None else time.time()
+        return [h for h, t in self.last_seen.items()
+                if now - t > self.cfg.heartbeat_timeout_s]
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryPlan:
+    action: str                    # none | rebalance | remesh
+    evict: tuple = ()
+    new_mesh_shape: Optional[tuple] = None
+    note: str = ""
+
+
+def plan_recovery(n_hosts: int, devices_per_host: int, dead: List[str],
+                  stragglers: List[str], model_parallel: int) -> RecoveryPlan:
+    """Decide the cheapest recovery that keeps the mesh factorizable.
+
+    Policy: dead hosts force a re-mesh (drop to the largest device count
+    divisible by model_parallel); stragglers are first rebalanced (smaller
+    per-host batch via the backpressure admission queue), evicted only if
+    they persist.
+    """
+    if dead:
+        alive = n_hosts - len(dead)
+        devices = alive * devices_per_host
+        dp = devices // model_parallel
+        if dp < 1:
+            return RecoveryPlan("remesh", tuple(dead), None,
+                                "not enough devices for model parallelism")
+        return RecoveryPlan("remesh", tuple(dead),
+                            (dp, model_parallel),
+                            f"rebuild ({dp},{model_parallel}) mesh, restore "
+                            "latest checkpoint with resharding")
+    if stragglers:
+        return RecoveryPlan("rebalance", tuple(stragglers), None,
+                            "shift admission quota away from stragglers "
+                            "(H-queue weighting), evict on next strike")
+    return RecoveryPlan("none")

@@ -1,0 +1,84 @@
+"""Process-local lowering flags.
+
+`layer_scan` wraps `lax.scan` for *layer stacks*: under
+`unrolled_scans()` the stack is fully unrolled so XLA's HLO cost analysis
+(which counts while-loop bodies once, not x trip count) sees every layer.
+The dry-run uses this for its depth-probe compiles; production lowering
+keeps the rolled scan (small HLO, fast compile).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+
+_UNROLL = contextvars.ContextVar("repro_unroll_scans", default=False)
+_ATTN = contextvars.ContextVar("repro_attn_impl", default="naive")
+_SEQ_PAR_TP = contextvars.ContextVar("repro_seq_par_tp", default=False)
+_CTX_PAR = contextvars.ContextVar("repro_ctx_par", default=False)
+
+
+@contextlib.contextmanager
+def unrolled_scans():
+    tok = _UNROLL.set(True)
+    try:
+        yield
+    finally:
+        _UNROLL.reset(tok)
+
+
+@contextlib.contextmanager
+def attention_impl(name: str):
+    """naive (materialized scores) | chunked (online-softmax, flash-in-XLA)."""
+    assert name in ("naive", "chunked"), name
+    tok = _ATTN.set(name)
+    try:
+        yield
+    finally:
+        _ATTN.reset(tok)
+
+
+def attn_impl() -> str:
+    return _ATTN.get()
+
+
+@contextlib.contextmanager
+def seq_parallel_tp(on: bool = True):
+    """Megatron-style sequence-parallel TP: residual-stream activations are
+    sharded over the model axis on the sequence dim between blocks, turning
+    per-layer all-reduces into reduce-scatter + all-gather (2x fewer bytes)."""
+    tok = _SEQ_PAR_TP.set(on)
+    try:
+        yield
+    finally:
+        _SEQ_PAR_TP.reset(tok)
+
+
+def seq_par_tp() -> bool:
+    return _SEQ_PAR_TP.get()
+
+
+def scans_unrolled() -> bool:
+    return _UNROLL.get()
+
+
+def layer_scan(f, init, xs, **kw):
+    return jax.lax.scan(f, init, xs, unroll=True if _UNROLL.get() else 1, **kw)
+
+
+@contextlib.contextmanager
+def context_parallel(on: bool = True):
+    """Context parallelism for train/prefill attention: the query sequence
+    dim is sharded over the *model* axis during score computation (K/V are
+    gathered), so attention work divides by the model-axis size even when
+    head counts don't (e.g. 40 heads on a 16-way axis)."""
+    tok = _CTX_PAR.set(on)
+    try:
+        yield
+    finally:
+        _CTX_PAR.reset(tok)
+
+
+def ctx_par() -> bool:
+    return _CTX_PAR.get()

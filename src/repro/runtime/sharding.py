@@ -1,0 +1,139 @@
+"""Logical-axis sharding rules (DP / FSDP / TP / EP / SP) with divisibility
+fallback.
+
+Params and activations carry *logical* axis names; `make_rules` maps them to
+mesh axes given the RunConfig knobs, and `spec_for` drops any mesh axis that
+does not divide the concrete dim (e.g. qwen2's 14 heads on a 16-way model
+axis -> replicated heads, sharded FFN/vocab).
+
+A process-global context (set by the launcher / dry-run) makes
+`constrain(x, axes)` a no-op in plain CPU tests and a
+`with_sharding_constraint` under a mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    table: dict
+    mesh: Mesh
+
+    def axis_size(self, axes) -> int:
+        if axes is None:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        return int(np.prod([self.mesh.shape[a] for a in axes]))
+
+
+def make_rules(mesh: Mesh, *, fsdp: bool = True, expert_parallel: bool = True,
+               seq_shard_decode: bool = True,
+               kv_seq_model: bool = False) -> Rules:
+    """kv_seq_model: shard the KV-cache sequence dim over the *model* axis
+    (flash-decode style partial-softmax) — the right call when kv_heads do
+    not divide the model axis (else the cache would be replicated 16x)."""
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    tp = "model" if "model" in mesh.shape else None
+    fs = dp_axes if fsdp else None
+    table = {
+        # ---- parameter logical axes
+        "layers": None,
+        "embed": fs,                      # FSDP shards the d_model dim
+        "vocab": tp,
+        "heads": tp,
+        "kv_heads": tp,
+        "head_dim": None,
+        "ff": tp,
+        "experts": tp if expert_parallel else None,
+        "expert_ff": None if expert_parallel else tp,
+        "dinner": tp,                     # SSM inner channels
+        "conv": None,
+        "state": None,
+        "ssm_heads": tp,
+        # ---- activation logical axes
+        "act_batch": dp_axes,
+        "act_group": dp_axes,
+        "act_seq": None,
+        "act_seq_ctx": tp,                # context-parallel attention
+        "act_embed": None,
+        "act_ff": tp,
+        "act_heads": tp,
+        "act_kv_heads": tp,
+        "act_dinner": tp,
+        "act_experts": tp if expert_parallel else None,
+        "cache_seq": (("model",) if kv_seq_model else
+                      (dp_axes if seq_shard_decode else None)),
+        "cache_batch": dp_axes,
+    }
+    return Rules(table=table, mesh=mesh)
+
+
+def spec_for(shape: Sequence[int], axes: Sequence[Optional[str]],
+             rules: Rules) -> P:
+    """PartitionSpec with divisibility-aware fallback to replication."""
+    entries = []
+    used = set()
+    for dim, ax in zip(shape, axes):
+        mesh_axes = rules.table.get(ax) if ax else None
+        if mesh_axes is None:
+            entries.append(None)
+            continue
+        if isinstance(mesh_axes, str):
+            mesh_axes = (mesh_axes,)
+        mesh_axes = tuple(a for a in mesh_axes if a not in used)
+        size = int(np.prod([rules.mesh.shape[a] for a in mesh_axes])) if mesh_axes else 1
+        if mesh_axes and dim % size == 0 and dim > 0:
+            entries.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+            used.update(mesh_axes)
+        else:
+            entries.append(None)
+    return P(*entries)
+
+
+def sharding_for(value, axes, rules: Rules) -> NamedSharding:
+    return NamedSharding(rules.mesh, spec_for(value.shape, axes, rules))
+
+
+def tree_shardings(values, axes_tree, rules: Rules):
+    """Map an (abstract) value tree + logical-axes tree -> NamedSharding tree."""
+    # tree_map flattens `values` first and passes the matching axes subtree
+    # (a tuple of logical names) whole to the mapped function.
+    return jax.tree_util.tree_map(
+        lambda v, a: sharding_for(v, a, rules), values, axes_tree)
+
+
+# ---------------------------------------------------------------------------
+# Process-global constraint context
+# ---------------------------------------------------------------------------
+
+_ACTIVE: list = []
+
+
+@contextlib.contextmanager
+def use_rules(rules: Rules):
+    _ACTIVE.append(rules)
+    try:
+        yield rules
+    finally:
+        _ACTIVE.pop()
+
+
+def active_rules() -> Optional[Rules]:
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+def constrain(x, axes: Sequence[Optional[str]]):
+    """with_sharding_constraint if a rules context is active, else identity."""
+    r = active_rules()
+    if r is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(r.mesh, spec_for(x.shape, axes, r)))

@@ -1,0 +1,151 @@
+"""Train / prefill / serve step builders with full sharding metadata.
+
+`make_train_step` assembles loss -> (optional microbatch-accumulated) grads
+-> (optional compressed-all-reduce) -> AdamW, threading the backpressure MoE
+router queues H through the step (updated outside the gradient, like the
+paper's H_n).  Every builder also returns the logical-axes trees for its
+state so the launcher / dry-run can derive NamedShardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RunConfig
+from repro.models import get_model, split_tree
+from repro.runtime.flags import layer_scan
+from repro.models.transformer import ModelState
+from repro.optim import (AdamW, AdamWState, EFState, compress_int8_ef,
+                         compress_topk_ef, init_ef, init_ef_abstract,
+                         warmup_cosine)
+
+
+class TrainState(NamedTuple):
+    step: jax.Array                  # [] int32
+    params: Any
+    opt: AdamWState
+    router_H: Optional[jax.Array]    # [L, E] or None
+    ef: Optional[EFState]            # error-feedback residuals or None
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+def make_optimizer(total_steps: int = 10_000) -> AdamW:
+    return AdamW(lr=warmup_cosine(3e-4, warmup=200, total=total_steps))
+
+
+def init_train_state(rcfg: RunConfig, key=None, abstract: bool = False,
+                     optimizer: AdamW | None = None):
+    """Returns (state, state_axes) — concrete or ShapeDtypeStruct."""
+    api = get_model(rcfg.model)
+    opt = optimizer or make_optimizer()
+    ann = api.init(key=key, dtype=_dtype(rcfg.param_dtype), abstract=abstract)
+    params, p_axes = split_tree(ann)
+    opt_state = opt.init_abstract(params) if abstract else opt.init(params)
+    ms = api.init_state()
+    H = ms.router_H
+    if H is not None and abstract:
+        H = jax.ShapeDtypeStruct(H.shape, H.dtype)
+    ef = None
+    if rcfg.grad_compression != "none":
+        ef = init_ef_abstract(params) if abstract else init_ef(params)
+
+    step0 = (jax.ShapeDtypeStruct((), jnp.int32) if abstract
+             else jnp.zeros((), jnp.int32))
+    state = TrainState(step=step0, params=params, opt=opt_state,
+                       router_H=H, ef=ef)
+
+    axes = TrainState(
+        step=(),
+        params=p_axes,
+        opt=AdamWState(count=(), m=p_axes, v=p_axes),
+        router_H=(None, None) if H is not None else None,
+        ef=EFState(err=p_axes) if ef is not None else None,
+    )
+    return state, axes
+
+
+def make_train_step(rcfg: RunConfig, optimizer: AdamW | None = None):
+    api = get_model(rcfg.model)
+    opt = optimizer or make_optimizer()
+    adt = _dtype(rcfg.activ_dtype)
+
+    def loss_fn(params, batch, router_H):
+        loss, (H, metrics) = api.loss(params, batch, activ_dtype=adt,
+                                      remat=rcfg.remat, router_H=router_H)
+        return loss, (H, metrics)
+
+    def train_step(state: TrainState, batch):
+        if rcfg.grad_accum > 1:
+            # microbatch accumulation via scan (batch dim 0 splits evenly)
+            def micro(carry, mb):
+                g_acc, l_acc, H = carry
+                (l, (H2, _)), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    state.params, mb, H)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                     g_acc, g)
+                return (g_acc, l_acc + l, H2), None
+
+            mbs = jax.tree.map(
+                lambda t: t.reshape((rcfg.grad_accum,
+                                     t.shape[0] // rcfg.grad_accum)
+                                    + t.shape[1:]), batch)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              state.params)
+            # layer_scan: unrolled under the dry-run depth probes so the
+            # microbatch loop is visible to HLO cost analysis
+            (grads, loss, H), _ = layer_scan(
+                micro, (g0, jnp.zeros((), jnp.float32), state.router_H), mbs)
+            grads = jax.tree.map(lambda g: g / rcfg.grad_accum, grads)
+            loss = loss / rcfg.grad_accum
+            metrics = {"ce": loss}
+        else:
+            (loss, (H, metrics)), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state.params, batch, state.router_H)
+
+        ef = state.ef
+        if rcfg.grad_compression == "int8_ef":
+            grads, ef = compress_int8_ef(grads, ef)
+        elif rcfg.grad_compression == "topk_ef":
+            grads, ef = compress_topk_ef(grads, ef)
+
+        params, opt_state = opt.update(grads, state.opt, state.params)
+        new = TrainState(step=state.step + 1, params=params, opt=opt_state,
+                         router_H=H, ef=ef)
+        out_metrics = {"loss": loss, **{k: v for k, v in metrics.items()}}
+        return new, out_metrics
+
+    return train_step
+
+
+def make_prefill_step(rcfg: RunConfig):
+    """Forward pass emitting last-position logits (inference prefill)."""
+    api = get_model(rcfg.model)
+    adt = _dtype(rcfg.activ_dtype)
+
+    def prefill_step(params, batch, router_H):
+        logits, _, _ = api.logits(params, batch, activ_dtype=adt,
+                                  remat="none", router_H=router_H,
+                                  last_only=True)
+        return logits
+
+    return prefill_step
+
+
+def make_serve_step(rcfg: RunConfig):
+    """One decode step: new token against the KV cache / recurrent state."""
+    api = get_model(rcfg.model)
+    adt = _dtype(rcfg.activ_dtype)
+
+    def serve_step(params, caches, batch, router_H):
+        logits, caches = api.decode_step(params, caches, batch,
+                                         activ_dtype=adt, router_H=router_H)
+        return logits, caches
+
+    return serve_step

@@ -1,0 +1,5 @@
+from .scheduler import Replica, Request, Scheduler, simulate
+from .engine import Engine, ServeRequest
+
+__all__ = ["Replica", "Request", "Scheduler", "simulate", "Engine",
+           "ServeRequest"]

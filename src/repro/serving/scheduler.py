@@ -1,0 +1,138 @@
+"""Backpressure serving scheduler — the paper's π₃ mapped onto multi-replica
+LLM inference (DESIGN.md §2).
+
+Replica r = computation node with capacity C_r tokens/tick.  An incoming
+request (prompt of p tokens, expected output of g tokens) is the "query";
+its pending prefill work is the raw queue X_r, its pending decode work the
+processed queue D_r, and H_r is the virtual admission queue (eq. 10):
+
+    dispatch:  r* = argmin_r [ (1+eps_B) * D_r + X_r + H_r ]      (eq. 9)
+    per tick:  H_r <- [H_r + admitted_work_r - C_r]^+             (eq. 10)
+
+Replicas are fluid FIFO single-servers (work in token units, service =
+speed * C_r per tick) — completion times are exact for FIFO.  Baselines:
+round-robin and join-shortest-queue (by active request count).  Replicas
+may be heterogeneous and may straggle, the regimes where backlog-aware
+dispatch wins.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    arrival: int                  # tick index
+    prompt: int                   # prefill tokens
+    gen: int                      # decode tokens (work-weighted)
+    replica: int = -1
+    done_at: Optional[int] = None
+
+    @property
+    def work(self) -> float:
+        return float(self.prompt + 4.0 * self.gen)   # decode ~4x cost/token
+
+
+@dataclasses.dataclass
+class Replica:
+    cap: float                    # token-work units / tick
+    speed: float = 1.0            # straggler multiplier (<1 = slow)
+
+    def __post_init__(self):
+        self.served = 0.0         # cumulative work served
+        self.enqueued = 0.0       # cumulative work admitted
+        self.X = 0.0              # pending prefill work
+        self.D = 0.0              # pending decode work
+        self.H = 0.0              # admission virtual queue
+        self.admitted_tick = 0.0
+        self.fifo: List[tuple] = []   # (finish_work_mark, request)
+
+    def backlog(self, eps_b: float) -> float:
+        return (1.0 + eps_b) * self.D + self.X + self.H
+
+
+class Scheduler:
+    def __init__(self, replicas: List[Replica], policy: str = "bp",
+                 eps_b: float = 0.01):
+        self.replicas = replicas
+        self.policy = policy
+        self.eps_b = eps_b
+        self._rr = 0
+
+    def dispatch(self, req: Request) -> int:
+        if self.policy == "rr":
+            r = self._rr % len(self.replicas)
+            self._rr += 1
+        elif self.policy == "jsq":
+            r = int(np.argmin([len(rep.fifo) for rep in self.replicas]))
+        elif self.policy == "bp":
+            r = int(np.argmin([rep.backlog(self.eps_b)
+                               for rep in self.replicas]))
+        else:
+            raise ValueError(self.policy)
+        rep = self.replicas[r]
+        req.replica = r
+        rep.enqueued += req.work
+        rep.X += req.prompt
+        rep.D += 4.0 * req.gen
+        rep.admitted_tick += req.work
+        rep.fifo.append((rep.enqueued, req))
+        return r
+
+    def tick(self, now: int) -> List[Request]:
+        finished = []
+        for rep in self.replicas:
+            rep.H = max(rep.H + rep.admitted_tick - rep.cap, 0.0)   # eq. 10
+            rep.admitted_tick = 0.0
+            budget = rep.cap * rep.speed
+            rep.served += budget
+            # drain X first (prefill precedes decode), then D
+            dx = min(rep.X, budget)
+            rep.X -= dx
+            rep.D = max(rep.D - (budget - dx), 0.0)
+            while rep.fifo and rep.fifo[0][0] <= rep.served:
+                _, req = rep.fifo.pop(0)
+                req.done_at = now
+                finished.append(req)
+        return finished
+
+
+def simulate(policy: str, *, n_replicas: int = 8, ticks: int = 3000,
+             load: float = 0.85, seed: int = 0, straggler: int = -1,
+             hetero: bool = False, eps_b: float = 0.01) -> dict:
+    """Poisson request trace at target utilization -> latency percentiles."""
+    rng = np.random.default_rng(seed)
+    caps = np.full(n_replicas, 1000.0)
+    if hetero:
+        caps = rng.choice([500.0, 1000.0, 2000.0], size=n_replicas)
+    reps = [Replica(cap=float(c)) for c in caps]
+    if straggler >= 0:
+        reps[straggler].speed = 0.3
+    eff_cap = sum(r.cap * r.speed for r in reps)
+    mean_work = 1088 + 4.0 * 272               # E[prompt] + 4 E[gen]
+    rate = load * eff_cap / mean_work          # requests per tick
+
+    sched = Scheduler(reps, policy=policy, eps_b=eps_b)
+    done: List[Request] = []
+    rid = 0
+    for t in range(ticks):
+        for _ in range(rng.poisson(rate)):
+            req = Request(rid, t, prompt=int(rng.integers(128, 2048)),
+                          gen=int(rng.integers(32, 512)))
+            sched.dispatch(req)
+            rid += 1
+        done.extend(sched.tick(t))
+    lat = np.array([r.done_at - r.arrival for r in done
+                    if r.done_at is not None], dtype=np.float64)
+    backlog = sum(rep.X + rep.D for rep in reps)
+    return {
+        "completed": len(done), "submitted": rid,
+        "p50": float(np.percentile(lat, 50)) if len(lat) else float("inf"),
+        "p99": float(np.percentile(lat, 99)) if len(lat) else float("inf"),
+        "mean": float(lat.mean()) if len(lat) else float("inf"),
+        "residual_backlog": float(backlog),
+    }

@@ -1,0 +1,5 @@
+from .simulator import SimResult, simulate, sweep_rates, build_step
+from .workload import poisson_arrivals, bernoulli_batch_arrivals, constant_arrivals
+
+__all__ = ["SimResult", "simulate", "sweep_rates", "build_step",
+           "poisson_arrivals", "bernoulli_batch_arrivals", "constant_arrivals"]

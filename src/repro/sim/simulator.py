@@ -1,0 +1,95 @@
+"""Slot-level simulator: the whole queue network as one `lax.scan` program.
+
+The simulator is a single jit'd XLA program; sweeps over query rates run as
+`vmap` over lambda, so a full Fig.-5b curve is one device launch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import ComputeProblem
+from repro.core.policies import PolicyConfig, slot_step
+from repro.core.queues import NetState, StaticProblem, init_state
+from .workload import poisson_arrivals
+
+
+class SimResult(NamedTuple):
+    final_state: NetState
+    total_queue: jax.Array        # [T] backlog trajectory
+    delivered: jax.Array          # [T] cumulative processed packets at d
+    delivered_useful: jax.Array   # [T]
+    computed: jax.Array           # [T] per-slot computations (sum over nodes)
+    n_star: jax.Array             # [T] chosen comp node index (-1 if N/A)
+
+    @property
+    def avg_queue(self) -> jax.Array:
+        """Time-average total backlog (the paper's stability metric)."""
+        return self.total_queue.mean()
+
+    def useful_rate(self, window: int | None = None) -> jax.Array:
+        """Delivered-useful throughput over the trailing `window` slots."""
+        d = self.delivered_useful
+        if window is None or window >= d.shape[0]:
+            return d[-1] / d.shape[0]
+        return (d[-1] - d[-window - 1]) / window
+
+
+def build_step(problem: ComputeProblem, cfg: PolicyConfig) -> Callable:
+    sp = StaticProblem.build(problem)
+
+    def step(state: NetState, inputs):
+        arrivals, key = inputs
+        state, metrics = slot_step(sp, cfg, state, arrivals, key)
+        out = (metrics["total_queue"], metrics["delivered"],
+               metrics["delivered_useful"], metrics["computed"],
+               metrics["n_star"])
+        return state, out
+
+    return sp, step
+
+
+def simulate(problem: ComputeProblem, cfg: PolicyConfig, lam: float, T: int,
+             seed: int = 0, arrivals: jax.Array | None = None) -> SimResult:
+    """Run T slots with Poisson(lam) arrivals (or a supplied arrival trace)."""
+    key = jax.random.key(seed)
+    akey, skey = jax.random.split(key)
+    if arrivals is None:
+        arrivals = poisson_arrivals(akey, lam, T)
+    sp, step = build_step(problem, cfg)
+
+    @jax.jit
+    def run(arrivals, key):
+        keys = jax.random.split(key, T)
+        state = init_state(sp)
+        final, (tq, dlv, dlvu, comp, nstar) = jax.lax.scan(
+            step, state, (arrivals, keys))
+        return SimResult(final, tq, dlv, dlvu, comp, nstar)
+
+    return run(arrivals, skey)
+
+
+def sweep_rates(problem: ComputeProblem, cfg: PolicyConfig, lams, T: int,
+                seed: int = 0) -> SimResult:
+    """vmap the full simulation over a vector of query rates (Fig. 5b)."""
+    lams = jnp.asarray(lams, jnp.float32)
+    key = jax.random.key(seed)
+    akey, skey = jax.random.split(key)
+    arr = jax.vmap(lambda l, k: poisson_arrivals(k, l, T))(
+        lams, jax.random.split(akey, lams.shape[0]))
+
+    sp, step = build_step(problem, cfg)
+
+    @jax.jit
+    def run_one(arrivals, key):
+        keys = jax.random.split(key, T)
+        state = init_state(sp)
+        final, (tq, dlv, dlvu, comp, nstar) = jax.lax.scan(
+            step, state, (arrivals, keys))
+        return SimResult(final, tq, dlv, dlvu, comp, nstar)
+
+    return jax.vmap(run_one)(arr, jax.random.split(skey, lams.shape[0]))

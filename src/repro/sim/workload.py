@@ -1,0 +1,23 @@
+"""Query-arrival processes (paper §II-A: A(t) i.i.d., E[A(t)] = lambda)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def poisson_arrivals(key: jax.Array, lam: float | jax.Array, T: int) -> jax.Array:
+    """[T] i.i.d. Poisson(lambda) query counts."""
+    return jax.random.poisson(key, lam, shape=(T,)).astype(jnp.float32)
+
+
+def bernoulli_batch_arrivals(key: jax.Array, lam: float | jax.Array, T: int,
+                             batch: int = 4) -> jax.Array:
+    """[T] arrivals in bursts of `batch` with rate lambda (bursty stress test)."""
+    p = jnp.asarray(lam, jnp.float32) / batch
+    b = jax.random.bernoulli(key, jnp.minimum(p, 1.0), shape=(T,))
+    return b.astype(jnp.float32) * batch
+
+
+def constant_arrivals(lam: float, T: int) -> jax.Array:
+    """[T] deterministic fluid arrivals (useful for exact-capacity checks)."""
+    return jnp.full((T,), lam, jnp.float32)

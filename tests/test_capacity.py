@@ -1,0 +1,166 @@
+"""Theorem 1/4 LP upper bound: sanity against hand-computable topologies."""
+import numpy as np
+import pytest
+
+from repro.core import (ComputeProblem, capacity_upper_bound, grid_graph,
+                        line_graph, paper_grid_problem, single_node_capacity,
+                        triangle_graph)
+
+
+def test_triangle_dest_computes():
+    # Motivating example, computation at d: rate = min(C_d, R_1d, R_2d).
+    g = triangle_graph([3.0, 2.0, 4.0])   # edges (0,1),(0,2),(1,2)
+    p = ComputeProblem(g, s1=0, s2=1, dest=2, comp_nodes=(2,), comp_caps=(10.0,))
+    r = capacity_upper_bound(p)
+    # raw1 can use 0->2 (cap 2) and 0->1->2 sharing; LP finds the max.
+    # Cut at node 2: all raw must enter via links (0,2)+(1,2) and each query
+    # needs 2 raw packets -> lam <= (2+4)/2 = 3.
+    assert r.lam_star == pytest.approx(3.0, abs=1e-6)
+
+
+def test_triangle_computation_capacity_binds():
+    g = triangle_graph(10.0)
+    p = ComputeProblem(g, s1=0, s2=1, dest=2, comp_nodes=(2,), comp_caps=(1.5,))
+    r = capacity_upper_bound(p)
+    assert r.lam_star == pytest.approx(1.5, abs=1e-6)
+
+
+def test_line_network():
+    # 0 - 1 - 2, source 0 & 2, compute+deliver at 1? dest must receive results.
+    g = line_graph(3, capacity=4.0)
+    p = ComputeProblem(g, s1=0, s2=2, dest=1, comp_nodes=(1,), comp_caps=(100.0,))
+    r = capacity_upper_bound(p)
+    # each query: 1 raw over (0,1), 1 raw over (2,1); result born at dest.
+    assert r.lam_star == pytest.approx(4.0, abs=1e-6)
+
+
+def test_line_network_compute_at_source():
+    # compute at s1: raw2 crosses both links, processed crosses (0,1) back.
+    g = line_graph(3, capacity=4.0)
+    p = ComputeProblem(g, s1=0, s2=2, dest=1, comp_nodes=(0,), comp_caps=(100.0,))
+    r = capacity_upper_bound(p)
+    # link (0,1) carries raw2 downstream lam + processed lam => 2 lam <= 4;
+    # link (1,2) carries raw2 lam <= 4. So lam* = 2.
+    assert r.lam_star == pytest.approx(2.0, abs=1e-6)
+
+
+def test_paper_grid_capacities():
+    # Calibrated placement (DESIGN.md §1): C=2 computation-bound at 8,
+    # C=3 communication-bound at 10 (paper reads ~9.8 off the sim knee).
+    r2 = capacity_upper_bound(paper_grid_problem(C=2.0))
+    assert r2.lam_star == pytest.approx(8.0, abs=1e-6)
+    np.testing.assert_allclose(r2.lam_per_node, 2.0, atol=1e-6)
+    r3 = capacity_upper_bound(paper_grid_problem(C=3.0))
+    assert r3.lam_star == pytest.approx(10.0, abs=1e-6)
+
+
+def test_single_node_leq_multi():
+    p = paper_grid_problem(C=2.0)
+    multi = capacity_upper_bound(p).lam_star
+    singles = [single_node_capacity(p, i).lam_star for i in range(p.n_comp)]
+    assert all(s <= multi + 1e-9 for s in singles)
+    # load balancing over 4 nodes beats any single node here
+    assert multi > max(singles) + 0.5
+
+
+def test_rho0_overhead_shrinks_capacity():
+    # Dummy-packet overhead (1+eps_B) on the processed commodity can only
+    # reduce capacity (Theorem 3's factor).
+    p = paper_grid_problem(C=3.0)
+    base = capacity_upper_bound(p, rho0=1.0).lam_star
+    infl = capacity_upper_bound(p, rho0=1.5).lam_star
+    assert infl <= base + 1e-9
+
+
+def test_disconnected_source_zero():
+    # Two disjoint components: s2 cannot reach the comp node.
+    edges = np.array([(0, 1), (2, 3)])
+    from repro.core.graph import Graph
+    g = Graph(4, edges, np.array([5.0, 5.0]))
+    p = ComputeProblem(g, s1=0, s2=2, dest=1, comp_nodes=(1,), comp_caps=(5.0,))
+    r = capacity_upper_bound(p)
+    assert r.lam_star == pytest.approx(0.0, abs=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# multi-stream (multiclass) extension — paper §II-B/§VI
+# ---------------------------------------------------------------------------
+
+class TestMultiStream:
+    def test_single_stream_reduces_to_theorem4(self):
+        from repro.core.capacity import multi_stream_capacity
+        p = paper_grid_problem(C=2.0)
+        ms = multi_stream_capacity([p], weights=[1.0])
+        assert ms.lam_star == pytest.approx(8.0, abs=1e-6)
+
+    def test_two_identical_streams_split_shared_capacity(self):
+        from repro.core.capacity import multi_stream_capacity
+        p = paper_grid_problem(C=2.0)
+        ms = multi_stream_capacity([p, p])
+        # identical streams share C exactly: total capacity unchanged,
+        # each stream gets half
+        assert ms.lam_star == pytest.approx(8.0, abs=1e-6)
+        np.testing.assert_allclose(ms.lam_per_stream, 4.0, atol=1e-6)
+
+    def test_disjoint_streams_add_capacity(self):
+        from repro.core.capacity import multi_stream_capacity
+        from repro.core.graph import grid_graph
+        g = grid_graph(4, 4, 5.0)
+        # two streams using DIFFERENT computation nodes and endpoints
+        pa = ComputeProblem(g, s1=0, s2=3, dest=15, comp_nodes=(5,),
+                            comp_caps=(2.0,))
+        pb = ComputeProblem(g, s1=12, s2=15, dest=0, comp_nodes=(10,),
+                            comp_caps=(2.0,))
+        ms = multi_stream_capacity([pa, pb])
+        # each stream can run at its own node capacity 2 -> total 4
+        assert ms.lam_star == pytest.approx(4.0, abs=1e-6)
+
+    def test_weighted_mix_moves_boundary_point(self):
+        from repro.core.capacity import multi_stream_capacity
+        p = paper_grid_problem(C=2.0)
+        even = multi_stream_capacity([p, p], weights=[0.5, 0.5])
+        skew = multi_stream_capacity([p, p], weights=[0.9, 0.1])
+        # same total boundary for identical streams, different split
+        assert skew.lam_star == pytest.approx(even.lam_star, abs=1e-6)
+        assert skew.lam_per_stream[0] == pytest.approx(0.9 * skew.lam_star,
+                                                       abs=1e-6)
+
+
+class TestMotivatingExample:
+    """Paper §I.A: the triangle with the three single-path options.  The LP
+    optimum must (i) dominate every single-path option and (ii) equal the
+    best of them when single-path is optimal, (iii) strictly beat them when
+    multipath load-balancing helps."""
+
+    def _single_path_rates(self, C, R12, R1d, R2d, lam=1e9):
+        opt1 = min(C[1], lam, R12, R2d)    # compute at source 2
+        opt2 = min(C[0], lam, R12, R1d)    # compute at source 1
+        opt3 = min(C[2], lam, R1d, R2d)    # compute at destination
+        return opt1, opt2, opt3
+
+    def test_lp_dominates_single_paths(self):
+        from repro.core.graph import Graph
+        import itertools
+        for C1, C2, Cd, R12, R1d, R2d in itertools.product(
+                (0.5, 2.0), (1.0,), (3.0,), (1.0, 4.0), (2.0,), (1.5,)):
+            g = Graph(3, np.array([(0, 1), (0, 2), (1, 2)]),
+                      np.array([R12, R1d, R2d]))
+            p = ComputeProblem(g, s1=0, s2=1, dest=2,
+                               comp_nodes=(0, 1, 2), comp_caps=(C1, C2, Cd))
+            lam = capacity_upper_bound(p).lam_star
+            best_single = max(self._single_path_rates(
+                (C1, C2, Cd), R12, R1d, R2d))
+            assert lam >= best_single - 1e-6, (lam, best_single)
+
+    def test_multipath_beats_single_path(self):
+        # computation split across nodes: single-path best = min caps,
+        # load balancing adds them up (communication permitting)
+        from repro.core.graph import Graph
+        g = Graph(3, np.array([(0, 1), (0, 2), (1, 2)]),
+                  np.array([10.0, 10.0, 10.0]))
+        p = ComputeProblem(g, s1=0, s2=1, dest=2,
+                           comp_nodes=(0, 1, 2), comp_caps=(1.0, 1.0, 1.0))
+        lam = capacity_upper_bound(p).lam_star
+        best_single = 1.0
+        assert lam == pytest.approx(3.0, abs=1e-6)   # all three nodes used
+        assert lam > 2.5 * best_single

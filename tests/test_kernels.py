@@ -1,0 +1,213 @@
+"""Pallas kernel validation: shape/dtype sweeps + hypothesis properties,
+asserting allclose against the pure-jnp oracles (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.ops import flash_attention_op, attention_ref
+from repro.kernels.bp_route.ops import bp_route_op, bp_route_ref
+from repro.kernels.bp_topk.ops import bp_topk_op, bp_topk_ref
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FLASH_CASES = [
+    # (B, H, KH, S, T, D, causal, window, dtype)
+    (2, 4, 2, 128, 128, 64, True, None, jnp.float32),
+    (1, 4, 4, 256, 256, 32, True, 64, jnp.float32),
+    (2, 2, 1, 128, 256, 64, False, None, jnp.float32),
+    (1, 8, 2, 128, 128, 128, True, None, jnp.bfloat16),
+    (1, 2, 2, 64, 64, 16, True, 16, jnp.float32),
+    (1, 1, 1, 512, 512, 64, True, 128, jnp.float32),
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_flash_attention_allclose(case):
+    B, H, KH, S, T, D, causal, window, dtype = case
+    key = jax.random.key(42)
+    q = jax.random.normal(jax.random.fold_in(key, 1), (B, H, S, D), dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 2), (B, KH, T, D), dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 3), (B, KH, T, D), dtype)
+    out = flash_attention_op(q, k, v, causal=causal, window=window,
+                             block_q=64, block_k=64)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_block_shape_invariance():
+    key = jax.random.key(0)
+    q = jax.random.normal(key, (1, 2, 256, 64))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 2, 256, 64))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 2, 256, 64))
+    outs = [np.asarray(flash_attention_op(q, k, v, block_q=bq, block_k=bk))
+            for bq, bk in [(64, 64), (128, 64), (64, 128), (256, 256)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=6, deadline=None)
+@given(s_blocks=st.integers(1, 4), d=st.sampled_from([32, 64]),
+       causal=st.booleans(), seed=st.integers(0, 100))
+def test_flash_attention_property(s_blocks, d, causal, seed):
+    S = 64 * s_blocks
+    key = jax.random.key(seed)
+    q = jax.random.normal(jax.random.fold_in(key, 1), (1, 2, S, d))
+    k = jax.random.normal(jax.random.fold_in(key, 2), (1, 2, S, d))
+    v = jax.random.normal(jax.random.fold_in(key, 3), (1, 2, S, d))
+    out = flash_attention_op(q, k, v, causal=causal, block_q=64, block_k=64)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# bp_route
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("E,C,N", [(24, 12, 16), (300, 48, 64), (7, 3, 5),
+                                   (1024, 96, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bp_route_allclose(E, C, N, dtype):
+    key = jax.random.key(1)
+    Q = (jax.random.uniform(key, (N, C)) * 100).astype(dtype)
+    edges = jax.random.randint(jax.random.fold_in(key, 1), (E, 2), 0, N)
+    # avoid self loops
+    edges = edges.at[:, 1].set((edges[:, 1] + 1 + edges[:, 0]) % N)
+    cap = jax.random.uniform(jax.random.fold_in(key, 2), (E,)) * 10
+    cls, rate, dirn = bp_route_op(Q, edges, cap)
+    rcls, rrate, rdirn = bp_route_ref(Q[edges[:, 0]], Q[edges[:, 1]], cap)
+    np.testing.assert_array_equal(np.asarray(cls), np.asarray(rcls))
+    np.testing.assert_allclose(np.asarray(rate), np.asarray(rrate), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(dirn), np.asarray(rdirn))
+
+
+def test_bp_route_zero_diff_no_rate():
+    Q = jnp.ones((4, 6)) * 3.0
+    edges = jnp.array([[0, 1], [2, 3]])
+    cap = jnp.array([5.0, 5.0])
+    _, rate, _ = bp_route_op(Q, edges, cap)
+    np.testing.assert_allclose(np.asarray(rate), 0.0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(e=st.integers(1, 60), c=st.integers(1, 30), seed=st.integers(0, 999))
+def test_bp_route_property(e, c, seed):
+    key = jax.random.key(seed)
+    qm = jax.random.uniform(jax.random.fold_in(key, 1), (e, c)) * 50
+    ql = jax.random.uniform(jax.random.fold_in(key, 2), (e, c)) * 50
+    cap = jnp.ones((e,)) * 2.5
+    from repro.kernels.bp_route.kernel import bp_route_decide
+    cls, rate, dirn = bp_route_decide(qm, ql, cap, block_e=16)
+    rcls, rrate, rdirn = bp_route_ref(qm, ql, cap)
+    np.testing.assert_array_equal(np.asarray(cls), np.asarray(rcls))
+    np.testing.assert_array_equal(np.asarray(dirn), np.asarray(rdirn))
+    # the chosen class really is the max |differential backlog|
+    diff = np.abs(np.asarray(qm) - np.asarray(ql))
+    np.testing.assert_allclose(diff[np.arange(e), np.asarray(cls)],
+                               diff.max(axis=1), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# bp_topk
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("T,E,k", [(64, 8, 2), (256, 64, 6), (100, 32, 8),
+                                   (512, 16, 1)])
+def test_bp_topk_allclose(T, E, k):
+    key = jax.random.key(2)
+    scores = jax.random.normal(key, (T, E))
+    H = jax.random.uniform(jax.random.fold_in(key, 1), (E,)) * 0.5
+    idx, w = bp_topk_op(scores, H, k, block_t=64)
+    ridx, rw = bp_topk_ref(scores, H, k)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+    np.testing.assert_allclose(np.asarray(w), np.asarray(rw),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_bp_topk_weights_normalized_and_bias_steers():
+    T, E, k = 128, 16, 4
+    scores = jax.random.normal(jax.random.key(3), (T, E))
+    zero_bias = jnp.zeros((E,))
+    idx0, w0 = bp_topk_op(scores, zero_bias, k)
+    np.testing.assert_allclose(np.asarray(w0.sum(axis=1)), 1.0, atol=1e-5)
+    # huge bias on expert 0 bans it from selection
+    ban = jnp.zeros((E,)).at[0].set(1e6)
+    idx1, _ = bp_topk_op(scores, ban, k)
+    assert not np.any(np.asarray(idx1) == 0)
+
+
+@settings(max_examples=8, deadline=None)
+@given(t=st.integers(1, 80), e=st.sampled_from([8, 16, 64]),
+       k=st.integers(1, 6), seed=st.integers(0, 99))
+def test_bp_topk_property(t, e, k, seed):
+    k = min(k, e)
+    scores = jax.random.normal(jax.random.key(seed), (t, e))
+    H = jax.random.uniform(jax.random.key(seed + 1), (e,))
+    idx, w = bp_topk_op(scores, H, k, block_t=32)
+    ridx, rw = bp_topk_ref(scores, H, k)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+    np.testing.assert_allclose(np.asarray(w), np.asarray(rw),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# integration: kernel-backed MoE routing and banded window attention
+# ---------------------------------------------------------------------------
+
+def test_kernel_backed_moe_routing_parity():
+    """bp_topk kernel in the real MoE router path == einsum path."""
+    from repro.configs import get_config, reduced
+    from repro.core.router import RouterState
+    from repro.models.common import Init, split_tree
+    from repro.models.moe import _route, init_moe
+
+    cfg = reduced(get_config("moonshot-v1-16b-a3b"))
+    x = jax.random.normal(jax.random.key(0), (2, 16, cfg.d_model))
+    p, _ = split_tree(init_moe(cfg, Init(key=jax.random.key(1))))
+    rs = RouterState(H=jnp.arange(cfg.n_experts, dtype=jnp.float32),
+                     steps=jnp.zeros((), jnp.int32))
+    a = _route(cfg, p, x, rs, use_kernel=False)
+    b = _route(cfg, p, x, rs, use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    np.testing.assert_allclose(np.asarray(a[1]), np.asarray(b[1]),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("S,window", [(37, 8), (64, 16), (128, 32), (16, 16)])
+def test_banded_window_attention_allclose(S, window):
+    from repro.models.attention import sdpa, sdpa_banded, _mask
+    key = jax.random.key(7)
+    q = jax.random.normal(jax.random.fold_in(key, 1), (2, S, 4, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 2), (2, S, 2, 16))
+    v = jax.random.normal(jax.random.fold_in(key, 3), (2, S, 2, 16))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (2, S))
+    ref = sdpa(q, k, v, _mask(pos, pos, causal=True, window=window))
+    out = sdpa_banded(q, k, v, pos, pos, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=6, deadline=None)
+@given(nblocks=st.integers(1, 5), window=st.sampled_from([8, 16]),
+       seed=st.integers(0, 99))
+def test_chunked_attention_property(nblocks, window, seed):
+    from repro.models.attention import sdpa, sdpa_chunked, _mask
+    S = 16 * nblocks + 3
+    key = jax.random.key(seed)
+    q = jax.random.normal(jax.random.fold_in(key, 1), (1, S, 2, 8))
+    k = jax.random.normal(jax.random.fold_in(key, 2), (1, S, 2, 8))
+    v = jax.random.normal(jax.random.fold_in(key, 3), (1, S, 2, 8))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (1, S))
+    ref = sdpa(q, k, v, _mask(pos, pos, causal=True, window=window))
+    out = sdpa_chunked(q, k, v, pos, pos, causal=True, window=window,
+                       chunk_q=16, chunk_k=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,103 @@
+"""Decode/prefill consistency: step-by-step decoding must reproduce the
+parallel (train/prefill) forward logits.  This validates the KV caches,
+RoPE offsets, ring-buffer windows, the Mamba2 chunked SSD scan against its
+own recurrence, and the mLSTM parallel form against its recurrent form.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import get_model, split_tree
+from repro.models import transformer as tfm
+
+S = 12
+B = 2
+
+CONSISTENCY_ARCHS = [
+    "olmo-1b",            # plain dense
+    "qwen2-0.5b",         # GQA + bias
+    "gemma3-27b",         # local:global pattern + ring-buffer window caches
+    "granite-moe-1b-a400m",  # MoE decode
+    "zamba2-2.7b",        # Mamba2 chunked scan vs recurrence + shared attn
+    "xlstm-350m",         # mLSTM parallel vs recurrent + sLSTM scan
+    "seamless-m4t-large-v2",  # enc-dec with cross cache
+]
+
+
+def _setup(arch):
+    cfg = reduced(get_config(arch))
+    api = get_model(cfg)
+    params, _ = split_tree(api.init(key=jax.random.key(0)))
+    tokens = jax.random.randint(jax.random.key(3), (B, S), 0, cfg.vocab)
+    return cfg, api, params, tokens
+
+
+@pytest.mark.parametrize("arch", CONSISTENCY_ARCHS)
+def test_decode_matches_forward(arch):
+    cfg, api, params, tokens = _setup(arch)
+    ms = api.init_state()
+
+    if cfg.family == "encdec":
+        from repro.models import encdec
+        frames = jax.random.normal(jax.random.key(4), (B, S, cfg.d_model))
+        memory = encdec.encode(cfg, params, frames, remat="none")
+        full = encdec.decode_fwd(cfg, params, tokens, memory,
+                                 activ_dtype=jnp.float32, remat="none")
+        caches = encdec.build_cross_cache(cfg, params, memory, S + 2,
+                                          jnp.float32)
+    else:
+        batch = {"tokens": tokens}
+        full, _, _ = api.logits(params, batch, activ_dtype=jnp.float32,
+                                router_H=ms.router_H)
+        caches = api.init_decode(B, S + 2, jnp.float32)
+
+    full = np.asarray(full)           # [B, S, V]
+    for t in range(S):
+        step, caches = api.decode_step(params, caches,
+                                       {"tokens": tokens[:, t]},
+                                       activ_dtype=jnp.float32,
+                                       router_H=ms.router_H)
+        np.testing.assert_allclose(np.asarray(step), full[:, t],
+                                   rtol=2e-3, atol=2e-3,
+                                   err_msg=f"{arch} step {t}")
+
+
+def test_mamba_chunk_invariance():
+    """SSD output must not depend on the chunk size."""
+    import dataclasses
+    from repro.models.mamba import init_mamba, mamba_fwd
+    from repro.models.common import Init, split_tree as st
+    cfg16 = reduced(get_config("zamba2-2.7b"))
+    p, _ = st(init_mamba(cfg16, Init(key=jax.random.key(0))))
+    x = jax.random.normal(jax.random.key(1), (2, 32, cfg16.d_model))
+    outs = []
+    for chunk in (4, 8, 16, 32):
+        c = dataclasses.replace(cfg16, ssm_chunk=chunk)
+        outs.append(np.asarray(mamba_fwd(c, p, x)))
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=2e-4, atol=2e-4)
+
+
+def test_sliding_window_masks_distant_tokens():
+    """With a window, changing tokens far in the past must not change the
+    current logits (locality), but changing recent ones must."""
+    cfg = reduced(get_config("gemma3-27b"))
+    # single local layer stack for a sharp test
+    import dataclasses
+    cfg = dataclasses.replace(cfg, n_layers=6, local_global=5, window=4)
+    api = get_model(cfg)
+    params, _ = split_tree(api.init(key=jax.random.key(0)))
+    toks = jax.random.randint(jax.random.key(5), (1, 16), 0, cfg.vocab)
+    base, _, _ = api.logits(params, {"tokens": toks},
+                            activ_dtype=jnp.float32)
+    # NOTE: global layers see everything, so only check the *local* masking
+    # via the attention module directly.
+    from repro.models.attention import _mask
+    pos = jnp.arange(10)[None, :]
+    m = _mask(pos, pos, causal=True, window=4)
+    m = np.asarray(m[0])
+    assert m[9, 9] and m[9, 6]
+    assert not m[9, 5] and not m[9, 0]
+    assert not m[0, 9]

@@ -1,0 +1,80 @@
+"""Backpressure MoE router: balance properties and H-queue dynamics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.router import (RouterConfig, init_router_state, route,
+                               load_violation)
+
+
+def _skewed_logits(key, T, E, hot=0, strength=3.0):
+    logits = jax.random.normal(key, (T, E)) * 0.5
+    return logits.at[:, hot].add(strength)
+
+
+def test_plain_router_collapses_backpressure_balances():
+    key = jax.random.key(0)
+    E, T, k = 16, 512, 2
+    state_bp = init_router_state(E)
+    state_pl = init_router_state(E)
+    cfg_bp = RouterConfig(n_experts=E, k=k, mode="backpressure", beta=2.0)
+    cfg_pl = RouterConfig(n_experts=E, k=k, mode="plain")
+    loads_bp, loads_pl = [], []
+    for s in range(30):
+        logits = _skewed_logits(jax.random.fold_in(key, s), T, E)
+        out_bp = route(cfg_bp, state_bp, logits)
+        out_pl = route(cfg_pl, state_pl, logits)
+        state_bp, state_pl = out_bp.new_state, out_pl.new_state
+        loads_bp.append(out_bp.load)
+        loads_pl.append(out_pl.load)
+    v_bp = float(load_violation(jnp.stack(loads_bp[-10:]).mean(0)))
+    v_pl = float(load_violation(jnp.stack(loads_pl[-10:]).mean(0)))
+    assert v_pl > 3.0          # plain top-k slams the hot expert
+    assert v_bp < 1.6          # backpressure bias spreads the load
+    assert v_bp < v_pl / 2
+
+
+def test_h_queue_update_rule():
+    # H_e <- [H_e + assigned_e - capacity]^+  (paper eq. for H_n).
+    E, T, k = 4, 8, 1
+    cfg = RouterConfig(n_experts=E, k=k, mode="backpressure", beta=0.0)
+    state = init_router_state(E)
+    logits = jnp.full((T, E), -10.0).at[:, 2].set(10.0)   # all to expert 2
+    out = route(cfg, state, logits)
+    cap = T * k / E
+    expected = np.zeros(E)
+    expected[2] = T - cap
+    np.testing.assert_allclose(np.asarray(out.new_state.H), expected, atol=1e-5)
+
+
+def test_combine_weights_normalized_and_from_gates():
+    key = jax.random.key(1)
+    cfg = RouterConfig(n_experts=8, k=3, mode="backpressure", beta=1.0)
+    out = route(cfg, init_router_state(8), jax.random.normal(key, (32, 8)))
+    s = np.asarray(out.combine_w.sum(axis=1))
+    np.testing.assert_allclose(s, 1.0, atol=1e-5)
+    assert np.all(np.asarray(out.combine_w) >= 0)
+
+
+def test_aux_mode_has_differentiable_loss():
+    cfg = RouterConfig(n_experts=8, k=2, mode="aux", aux_coef=0.01)
+
+    def loss(logits):
+        return route(cfg, init_router_state(8), logits).aux_loss
+
+    g = jax.grad(loss)(jnp.ones((16, 8)) * 0.1)
+    assert np.isfinite(np.asarray(g)).all()
+
+
+def test_bias_affects_selection_not_weights():
+    # With a huge H on the favourite expert, selection avoids it, and
+    # combine weights are still the renormalized raw gates of the selected.
+    E, k = 4, 1
+    cfg = RouterConfig(n_experts=E, k=k, mode="backpressure", beta=100.0)
+    H = jnp.array([0.0, 0.0, 1e6, 0.0])
+    state = init_router_state(E)._replace(H=H)
+    logits = jnp.tile(jnp.array([[0.0, 1.0, 5.0, 0.5]]), (10, 1))
+    out = route(cfg, state, logits)
+    assert not np.any(np.asarray(out.expert_idx) == 2)
+    np.testing.assert_allclose(np.asarray(out.combine_w), 1.0, atol=1e-6)

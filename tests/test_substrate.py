@@ -1,0 +1,248 @@
+"""Substrate tests: data pipeline, optimizer, compression, checkpointing,
+fault tolerance, serving scheduler + engine."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import Checkpointer
+from repro.data import DataConfig, TokenStream, unigram_entropy
+from repro.optim import (AdamW, compress_int8_ef, compress_topk_ef,
+                         global_norm, init_ef, warmup_cosine)
+from repro.runtime.fault import (StragglerConfig, StragglerDetector,
+                                 plan_recovery)
+from repro.serving import Engine, simulate
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+class TestData:
+    def test_deterministic_and_sharded(self):
+        cfg = DataConfig(vocab=512, seq_len=32, global_batch=8, seed=3)
+        a = TokenStream(cfg).batch(7)["tokens"]
+        b = TokenStream(cfg).batch(7)["tokens"]
+        np.testing.assert_array_equal(a, b)
+        # host shards partition the global batch deterministically
+        h0 = TokenStream(cfg, host_id=0, n_hosts=2).batch(7)["tokens"]
+        h1 = TokenStream(cfg, host_id=1, n_hosts=2).batch(7)["tokens"]
+        assert h0.shape == (4, 33) and h1.shape == (4, 33)
+        assert not np.array_equal(h0, h1)
+
+    def test_stream_is_learnable(self):
+        # bigram structure => entropy below unigram entropy is reachable;
+        # cheap proxy: adjacent-token mutual information is nonzero.
+        cfg = DataConfig(vocab=128, seq_len=256, global_batch=4, seed=0)
+        toks = TokenStream(cfg).batch(0)["tokens"]
+        x, y = toks[:, :-1].ravel() % 16, toks[:, 1:].ravel() % 16
+        joint = np.histogram2d(x, y, bins=16)[0] / x.size
+        px, py = joint.sum(1), joint.sum(0)
+        mi = np.nansum(joint * np.log(joint / (px[:, None] * py[None, :]
+                                               + 1e-12) + 1e-12))
+        assert mi > 0.05
+
+    def test_tokens_in_range(self):
+        cfg = DataConfig(vocab=64, seq_len=16, global_batch=2)
+        t = TokenStream(cfg).batch(0)["tokens"]
+        assert t.min() >= 0 and t.max() < 64
+
+
+# ---------------------------------------------------------------------------
+# optimizer + compression
+# ---------------------------------------------------------------------------
+
+class TestOptim:
+    def test_adamw_reduces_quadratic(self):
+        opt = AdamW(lr=0.1, weight_decay=0.0)
+        p = {"w": jnp.array([3.0, -2.0])}
+        s = opt.init(p)
+        for _ in range(200):
+            g = {"w": 2 * p["w"]}
+            p, s = opt.update(g, s, p)
+        assert float(jnp.abs(p["w"]).max()) < 0.05
+
+    def test_clip_norm(self):
+        opt = AdamW(lr=0.0, clip_norm=1.0)
+        g = {"w": jnp.ones(4) * 100}
+        # after clipping, the internal grads have norm 1 -> moments bounded
+        p = {"w": jnp.zeros(4)}
+        s = opt.init(p)
+        _, s2 = opt.update(g, s, p)
+        assert float(global_norm(s2.m)) <= 0.101
+
+    def test_schedule_shape(self):
+        sched = warmup_cosine(1.0, warmup=10, total=100)
+        assert float(sched(jnp.asarray(0))) == 0.0
+        assert float(sched(jnp.asarray(10))) == pytest.approx(1.0)
+        assert float(sched(jnp.asarray(100))) == pytest.approx(0.1, abs=1e-3)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 999))
+    def test_int8_ef_error_feedback_contracts(self, seed):
+        """EF invariant: dequantized + residual == original (exactly)."""
+        key = jax.random.key(seed)
+        g = {"a": jax.random.normal(key, (64,)) * 3.0}
+        ef = init_ef(g)
+        dq, ef2 = compress_int8_ef(g, ef)
+        np.testing.assert_allclose(np.asarray(dq["a"] + ef2.err["a"]),
+                                   np.asarray(g["a"]), rtol=1e-5, atol=1e-5)
+        # quantization error bounded by scale
+        scale = float(jnp.abs(g["a"]).max()) / 127.0
+        assert float(jnp.abs(ef2.err["a"]).max()) <= scale * 0.51 + 1e-6
+
+    def test_topk_ef_keeps_largest(self):
+        g = {"a": jnp.asarray(np.r_[np.zeros(90), np.arange(1, 11.0)])}
+        ef = init_ef(g)
+        kept, ef2 = compress_topk_ef(g, ef, frac=0.1)
+        assert int((kept["a"] != 0).sum()) == 10
+        np.testing.assert_allclose(np.asarray(kept["a"] + ef2.err["a"]),
+                                   np.asarray(g["a"]), atol=1e-6)
+
+    def test_ef_accumulates_small_signals(self):
+        """A gradient too small to survive quantization alone must get
+        through via the accumulated residual."""
+        g = {"a": jnp.r_[jnp.ones(1) * 1.0, jnp.ones(1) * 1e-3]}
+        ef = init_ef(g)
+        total = jnp.zeros(2)
+        n = 200
+        for _ in range(n):
+            dq, ef = compress_int8_ef(g, ef)
+            total = total + dq["a"]
+        # mean transmitted value of the small coordinate ~ its true value
+        # (quantization step is 1/127 ~ 0.0079, so 1e-3 only gets through
+        # via the accumulated residual every ~8 steps)
+        assert float(total[1] / n) == pytest.approx(1e-3, rel=0.25)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+class TestCheckpoint:
+    def _state(self, v=0.0):
+        return {"p": {"w": jnp.full((4, 4), v), "b": jnp.arange(3.0)},
+                "step": jnp.asarray(int(v), jnp.int32)}
+
+    def test_roundtrip(self, tmp_path):
+        ck = Checkpointer(tmp_path, keep=2)
+        ck.save(5, self._state(5.0))
+        out = ck.restore(self._state(0.0))
+        np.testing.assert_allclose(np.asarray(out["p"]["w"]), 5.0)
+        assert int(out["step"]) == 5
+
+    def test_keep_k_gc(self, tmp_path):
+        ck = Checkpointer(tmp_path, keep=2)
+        for s in (1, 2, 3, 4):
+            ck.save(s, self._state(float(s)))
+        assert ck.all_steps() == [3, 4]
+
+    def test_latest_and_explicit_step(self, tmp_path):
+        ck = Checkpointer(tmp_path, keep=5)
+        ck.save(1, self._state(1.0))
+        ck.save(9, self._state(9.0))
+        assert ck.latest_step() == 9
+        out = ck.restore(self._state(), step=1)
+        np.testing.assert_allclose(np.asarray(out["p"]["w"]), 1.0)
+
+    def test_async_save(self, tmp_path):
+        ck = Checkpointer(tmp_path)
+        ck.save(3, self._state(3.0), blocking=False)
+        ck.wait()
+        assert ck.latest_step() == 3
+
+    def test_structure_mismatch_raises(self, tmp_path):
+        ck = Checkpointer(tmp_path)
+        ck.save(1, self._state())
+        with pytest.raises(AssertionError):
+            ck.restore({"only": jnp.zeros(1)})
+
+    def test_restore_with_shardings(self, tmp_path):
+        # resharding path: restore onto the (1-device) mesh explicitly
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        ck = Checkpointer(tmp_path)
+        ck.save(2, self._state(2.0))
+        mesh = jax.make_mesh((1,), ("data",))
+        sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), self._state())
+        out = ck.restore(self._state(), shardings=sh)
+        assert out["p"]["w"].sharding.mesh.shape["data"] == 1
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+
+class TestFault:
+    def test_straggler_detection(self):
+        cfg = StragglerConfig(window=8, factor=1.5, patience=2,
+                              heartbeat_timeout_s=10)
+        det = StragglerDetector(["h0", "h1", "h2", "h3"], cfg)
+        for t in range(12):
+            for h in ("h0", "h1", "h2"):
+                det.record(h, 1.0, now=float(t))
+            det.record("h3", 3.0, now=float(t))
+            slow = det.stragglers()
+        assert slow == ["h3"]
+
+    def test_dead_host_heartbeat(self):
+        cfg = StragglerConfig(heartbeat_timeout_s=5)
+        det = StragglerDetector(["h0", "h1"], cfg)
+        det.record("h0", 1.0, now=100.0)
+        det.record("h1", 1.0, now=92.0)
+        assert det.dead(now=100.0) == ["h1"]
+
+    def test_recovery_plan_remesh(self):
+        plan = plan_recovery(n_hosts=64, devices_per_host=8,
+                             dead=["h7"], stragglers=[], model_parallel=16)
+        assert plan.action == "remesh"
+        assert plan.new_mesh_shape == ((63 * 8) // 16, 16)
+
+    def test_recovery_plan_rebalance_then_none(self):
+        p1 = plan_recovery(8, 8, [], ["h2"], 4)
+        assert p1.action == "rebalance" and p1.evict == ("h2",)
+        p0 = plan_recovery(8, 8, [], [], 4)
+        assert p0.action == "none"
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+class TestServing:
+    def test_bp_beats_rr_under_straggler(self):
+        rr = simulate("rr", ticks=2000, load=0.85, seed=1, straggler=0)
+        bp = simulate("bp", ticks=2000, load=0.85, seed=1, straggler=0)
+        assert bp["p99"] < rr["p99"]
+        assert bp["residual_backlog"] < rr["residual_backlog"]
+
+    def test_all_policies_complete_under_light_load(self):
+        for pol in ("rr", "jsq", "bp"):
+            r = simulate(pol, ticks=1000, load=0.4, seed=2)
+            assert r["completed"] > 0.9 * r["submitted"]
+
+    def test_engine_completes_and_outputs_agree(self):
+        """Engine mechanics: all requests finish with the requested length,
+        and two engines agree on the decode logits (exact token trajectories
+        are chaotic under CPU thread-order float jitter on a random-init
+        model, so we compare logits with tolerance instead)."""
+        from repro.configs import get_config, reduced
+        from repro.models import get_model, split_tree
+        cfg = reduced(get_config("qwen2-0.5b"))
+        api = get_model(cfg)
+        params, _ = split_tree(api.init(key=jax.random.key(0)))
+        engines = [Engine(cfg, params, slots=2, max_len=64) for _ in range(2)]
+        logits = []
+        for eng in engines:
+            eng.submit([5, 6, 7], max_new=5)
+            eng.submit([9, 10], max_new=5)
+            eng._admit()
+            lg, _ = eng._step(eng.params, eng.caches,
+                              jnp.asarray(eng._last_tok), eng.router_H)
+            logits.append(np.asarray(lg))
+        np.testing.assert_allclose(logits[0], logits[1], rtol=1e-4, atol=1e-5)
+        fin = engines[0].run_until_done()
+        assert len(fin) == 2
+        assert all(len(r.out) == 5 for r in fin.values())
