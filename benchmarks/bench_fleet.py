@@ -1,0 +1,103 @@
+"""Fleet sweep benchmark: scenarios vs their Theorem-4 LP capacity bounds.
+
+Runs a (scenario x policy x rate x seed) grid through the sharded fleet
+engine and emits a JSON capacity/efficiency table.  The smoke preset packs
+>= 64 simulations into <= 3 compiled programs (one per policy group) and
+checks the physical sanity of every scenario: measured useful rate never
+exceeds the LP upper bound, and pi3 sustains >= 0.8 * lam_star on the
+paper's 4x4 grid.
+
+Usage:
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+      python benchmarks/bench_fleet.py --preset smoke [--out fleet.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+PRESETS = {
+    "smoke": dict(
+        scenario_policies={
+            "paper_grid": ("pi3", "pi3bar"),
+            "random_geometric": ("pi3", "pi3bar"),
+            "expander": ("pi3", "pi3bar"),
+            "fat_tree": ("pi3", "pi3bar"),
+        },
+        rate_fracs=(0.3, 0.6, 0.8, 0.95),
+        seeds=(0, 1),
+        T=4000, chunk=500,
+    ),
+    "full": dict(
+        scenario_policies={
+            "paper_grid": ("pi1", "pi2", "pi3", "pi3bar"),
+            "random_geometric": ("pi3", "pi3bar"),
+            "ring": ("pi3", "pi3bar"),
+            "tree": ("pi3", "pi3bar"),
+            "expander": ("pi3", "pi3bar"),
+            "fat_tree": ("pi3", "pi3bar"),
+            "wireless_grid": ("pi3",),
+            "fading_geometric": ("pi3",),
+            "flaky_expander": ("pi3",),
+            "failing_grid": ("pi3",),
+        },
+        rate_fracs=(0.2, 0.4, 0.6, 0.8, 0.9, 0.95),
+        seeds=(0, 1, 2),
+        T=20000, chunk=1000,
+    ),
+}
+
+# Windowed rates can transiently exceed the long-run bound by backlog drain;
+# 2% covers that noise without masking a real capacity violation.
+LP_TOL = 1.02
+
+
+def run(emit, preset: str = "smoke") -> dict:
+    from repro.fleet import capacity_report
+
+    spec = PRESETS[preset]
+    t0 = time.time()
+    table = capacity_report(**spec)
+    wall = time.time() - t0
+    table["preset"] = preset
+    table["wall_s"] = wall
+
+    emit(f"fleet/{preset}/sweep,{wall*1e6/max(table['n_sims'],1):.0f},"
+         f"n_sims={table['n_sims']} n_programs={table['n_programs']}")
+    for scen, entry in table["scenarios"].items():
+        lam_star = entry["lam_star"]
+        for pol, row in entry["policies"].items():
+            emit(f"fleet/{preset}/{scen}/{pol},,lam_star={lam_star:.3f} "
+                 f"best={row['best_useful_rate']:.3f} "
+                 f"eff={row['efficiency']:.3f} "
+                 f"max_stable_offered={row['max_stable_offered']:.3f}")
+            assert row["best_useful_rate"] <= lam_star * LP_TOL, (
+                f"{scen}/{pol}: measured {row['best_useful_rate']:.3f} "
+                f"exceeds LP bound {lam_star:.3f}")
+
+    grid = table["scenarios"].get("paper_grid")
+    if grid is not None and "pi3" in grid["policies"]:
+        eff = grid["policies"]["pi3"]["efficiency"]
+        emit(f"fleet/{preset}/paper_grid/pi3_efficiency,,eff={eff:.3f}")
+        assert eff >= 0.8, f"pi3 efficiency {eff:.3f} < 0.8 on paper grid"
+
+    assert table["n_sims"] >= 64 or preset != "smoke"
+    assert table["n_programs"] <= 3 or preset != "smoke"
+    return table
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", choices=sorted(PRESETS), default="smoke")
+    ap.add_argument("--out", default=None, help="write the JSON table here")
+    args = ap.parse_args()
+    table = run(print, preset=args.preset)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(table, f, indent=2)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -35,6 +35,11 @@ def main() -> None:
         suites["bench_kernels"] = bench_kernels.run
     except ImportError:
         pass
+    try:
+        from . import bench_fleet
+        suites["bench_fleet"] = bench_fleet.run
+    except ImportError:
+        pass
 
     chosen = sys.argv[1:] or list(suites)
     failures = []

@@ -104,9 +104,17 @@ def bp_route_slot(sp: StaticProblem, state: NetState,
     best_n = best % NC
 
     alloc = cap * (jnp.abs(dmax) > 0)
+    # A link that cannot carry traffic this slot — padded (edge_mask 0) or
+    # with zero current capacity (event-model outage) — must not occupy a
+    # matching slot in the wireless interference model either.
+    weight = jnp.abs(dmax) * (cap > 0)
+    if sp.edge_mask is not None:
+        emask = jnp.asarray(sp.edge_mask, jnp.float32)
+        alloc = alloc * emask
+        weight = weight * emask
     if wireless:
         active = greedy_maximal_matching(jnp.asarray(sp.edges),
-                                         jnp.abs(dmax), sp.n_nodes)
+                                         weight, sp.n_nodes)
         alloc = alloc * active
     src = jnp.where(dmax > 0, m_idx, l_idx)
     dst = jnp.where(dmax > 0, l_idx, m_idx)
@@ -189,6 +197,8 @@ def computation_slot(sp: StaticProblem, cfg: PolicyConfig, state: NetState,
     """Combine pairs at every computation node; route output via the
     regulator (pi2/pi3) or directly (pi1/pi3bar)."""
     caps = jnp.asarray(sp.comp_caps)
+    if sp.comp_mask is not None:
+        caps = caps * jnp.asarray(sp.comp_mask, jnp.float32)
     P = available_pairs(sp, state, cfg.pairing)
     if cfg.thresholded:
         # pi1': combine C_n only when X1+X2 >= 2 C_n + X̄  (still physically
@@ -197,6 +207,8 @@ def computation_slot(sp: StaticProblem, cfg: PolicyConfig, state: NetState,
         Z = jnp.minimum(jnp.where(gate, caps, 0.0), P)
     else:
         Z = jnp.minimum(P, caps)                       # combine all possible
+    # (masked comp nodes have caps forced to 0 above, so Z == 0 there: P is
+    # clipped non-negative in available_pairs)
 
     X = state.X - Z[:, None]
     cum_comb = state.cum_comb + Z
@@ -226,6 +238,9 @@ def load_balance_slot(sp: StaticProblem, cfg: PolicyConfig, state: NetState,
                                              jnp.arange(sp.n_comp)]
                  + state.Q[sp.s1, 1, :] + state.Q[sp.s2, 2, :]
                  + state.H)                                        # eq. (9)
+        if sp.comp_mask is not None:
+            # Masked-out (padded/failed) comp nodes must never win the argmin.
+            score = jnp.where(jnp.asarray(sp.comp_mask) > 0, score, jnp.inf)
         n_star = jnp.argmin(score)
     else:
         n_star = jnp.asarray(cfg.fixed_node, dtype=jnp.int32)

@@ -44,7 +44,14 @@ class NetState(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class StaticProblem:
-    """Device-ready constant arrays describing a ComputeProblem."""
+    """Device-ready constant arrays describing a ComputeProblem.
+
+    `edge_mask` / `comp_mask` support *padded* instances (fleet batching,
+    DESIGN: src/repro/fleet/batching.py): entries with mask 0.0 are inert —
+    masked edges carry no traffic and masked computation nodes are never
+    selected by load balancing and never combine pairs.  `None` (the seed
+    default) means every edge/comp node is active.
+    """
 
     n_nodes: int
     n_comp: int
@@ -57,6 +64,8 @@ class StaticProblem:
     comp_caps: np.ndarray      # [NC] float32
     # sink mask: sink[k, i, n] == True when Q_k^{(i,n)} is 0 by convention
     sink: np.ndarray           # [N, 3, NC] bool
+    edge_mask: np.ndarray | None = None   # [E] float32, 1.0 = active
+    comp_mask: np.ndarray | None = None   # [NC] float32, 1.0 = active
 
     @staticmethod
     def build(problem: ComputeProblem) -> "StaticProblem":

@@ -1,0 +1,140 @@
+"""Padded topology batching: heterogeneous graphs as one vmappable pytree.
+
+The seed simulator compiles one XLA program per `ComputeProblem` because the
+problem constants (edges, capacities, sinks) are baked into the trace.  The
+fleet engine instead pads every instance to fleet-wide maxima and carries the
+problem as *traced* arrays, so a thousand different topologies share one
+compiled program under `vmap`/`shard_map`.
+
+Mask convention (the single source of truth — referenced by README and the
+core policies):
+
+  * Every instance is padded to shared maxima ``(n_nodes, n_edges, n_comp)``.
+  * Padded edges are self-loops ``(0, 0)`` with ``edge_cap == 0`` and
+    ``edge_mask == 0``.  A self-loop has zero differential backlog, so it can
+    never route traffic even before masking; the mask additionally keeps it
+    out of wireless matchings and any capacity statistics.
+  * Padded computation nodes point at node 0 with ``comp_caps == 0`` and
+    ``comp_mask == 0``.  Masked nodes are excluded from the load-balance
+    argmin (score forced to +inf) and combine zero pairs per slot.
+  * ``sink`` rows of padded classes are all ``False``; padded *nodes* simply
+    host queues that never receive traffic (no active edge touches them).
+
+`PaddedProblem` is duck-type compatible with `repro.core.queues.StaticProblem`
+— `slot_step`, `init_state`, and `make_step` accept either.  The padded node
+and class counts stay static (pytree aux data) so shapes remain concrete.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import ComputeProblem
+from repro.core.queues import StaticProblem
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class PaddedProblem:
+    """A (possibly batched) padded problem with traced constants."""
+
+    n_nodes: int               # static: padded node count
+    n_comp: int                # static: padded comp-node count
+    edges: jax.Array           # [..., E, 2] int32
+    edge_cap: jax.Array        # [..., E] float32
+    s1: jax.Array              # [...] int32
+    s2: jax.Array              # [...] int32
+    dest: jax.Array            # [...] int32
+    comp_nodes: jax.Array      # [..., NC] int32
+    comp_caps: jax.Array       # [..., NC] float32
+    sink: jax.Array            # [..., N, 3, NC] bool
+    edge_mask: jax.Array       # [..., E] float32
+    comp_mask: jax.Array       # [..., NC] float32
+
+    def tree_flatten(self):
+        leaves = (self.edges, self.edge_cap, self.s1, self.s2, self.dest,
+                  self.comp_nodes, self.comp_caps, self.sink,
+                  self.edge_mask, self.comp_mask)
+        return leaves, (self.n_nodes, self.n_comp)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(aux[0], aux[1], *leaves)
+
+    @property
+    def n_edges(self) -> int:
+        return int(self.edges.shape[-2])
+
+    def replace(self, **kw) -> "PaddedProblem":
+        return dataclasses.replace(self, **kw)
+
+    def with_capacity_scales(self, edge_scale: jax.Array,
+                             comp_scale: jax.Array) -> "PaddedProblem":
+        """Per-slot time-varying capacities (fleet event models)."""
+        return self.replace(edge_cap=self.edge_cap * edge_scale,
+                            comp_caps=self.comp_caps * comp_scale)
+
+
+@dataclasses.dataclass(frozen=True)
+class PadDims:
+    n_nodes: int
+    n_edges: int
+    n_comp: int
+
+    @staticmethod
+    def of(problems: Sequence[ComputeProblem]) -> "PadDims":
+        return PadDims(
+            n_nodes=max(p.graph.n_nodes for p in problems),
+            n_edges=max(p.graph.n_edges for p in problems),
+            n_comp=max(p.n_comp for p in problems),
+        )
+
+
+def pad_problem(problem: ComputeProblem, dims: PadDims) -> PaddedProblem:
+    """Embed one ComputeProblem into the fleet-wide padded shapes."""
+    sp = StaticProblem.build(problem)
+    N, E, NC = dims.n_nodes, dims.n_edges, dims.n_comp
+    e, nc = sp.edges.shape[0], sp.n_comp
+    assert sp.n_nodes <= N and e <= E and nc <= NC, "instance exceeds pad dims"
+
+    edges = np.zeros((E, 2), np.int32)               # padding: self-loop (0,0)
+    edges[:e] = sp.edges
+    edge_cap = np.zeros((E,), np.float32)
+    edge_cap[:e] = sp.edge_cap
+    edge_mask = np.zeros((E,), np.float32)
+    edge_mask[:e] = 1.0
+
+    comp_nodes = np.zeros((NC,), np.int32)           # padding: node 0, cap 0
+    comp_nodes[:nc] = sp.comp_nodes
+    comp_caps = np.zeros((NC,), np.float32)
+    comp_caps[:nc] = sp.comp_caps
+    comp_mask = np.zeros((NC,), np.float32)
+    comp_mask[:nc] = 1.0
+
+    sink = np.zeros((N, 3, NC), bool)
+    sink[:sp.n_nodes, :, :nc] = sp.sink
+
+    return PaddedProblem(
+        n_nodes=N, n_comp=NC,
+        edges=jnp.asarray(edges), edge_cap=jnp.asarray(edge_cap),
+        s1=jnp.int32(sp.s1), s2=jnp.int32(sp.s2), dest=jnp.int32(sp.dest),
+        comp_nodes=jnp.asarray(comp_nodes), comp_caps=jnp.asarray(comp_caps),
+        sink=jnp.asarray(sink),
+        edge_mask=jnp.asarray(edge_mask), comp_mask=jnp.asarray(comp_mask),
+    )
+
+
+def stack_problems(problems: Sequence[ComputeProblem],
+                   dims: PadDims | None = None) -> PaddedProblem:
+    """Pad + stack a fleet of problems into one batched PaddedProblem.
+
+    Every leaf gains a leading batch axis; `vmap`/`shard_map` over the pytree
+    then runs all instances inside a single compiled program.
+    """
+    dims = dims or PadDims.of(problems)
+    padded = [pad_problem(p, dims) for p in problems]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *padded)

@@ -1,0 +1,327 @@
+"""Scenario registry: parameterized topology generators + event/arrival models.
+
+A `Scenario` bundles everything the fleet engine needs to spawn simulation
+jobs: a topology factory (seed -> ComputeProblem), an arrival-process model,
+a capacity event model (time-varying links / comp-node failure), and the
+interference model (wired vs wireless).  Scenarios are registered by name so
+sweeps are declared as data (`["paper_grid", "random_geometric", ...]`).
+
+Event and arrival models are *online*: pure functions of (slot index, key),
+evaluated inside the scan body, so a 10^6-slot horizon never materializes a
+[T]-shaped trace.  Their registry order is frozen into tuples
+(`ARRIVAL_MODEL_ORDER`, `EVENT_MODEL_ORDER`) so per-job integer codes can
+drive a `lax.switch` — heterogeneous scenarios share one compiled program.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import ComputeProblem, Graph, grid_graph, paper_grid_problem
+from repro.sim import workload
+
+
+# ---------------------------------------------------------------------------
+# Arrival models: (key, lam) -> scalar arrivals for one slot.  Each wraps the
+# canonical [T]-trace law in repro.sim.workload with T=1 so the two stay in
+# lockstep (same clipping rules, same batch defaults).
+# ---------------------------------------------------------------------------
+
+def _arrival_poisson(key: jax.Array, lam: jax.Array) -> jax.Array:
+    return workload.poisson_arrivals(key, lam, 1)[0]
+
+
+def _arrival_bernoulli_batch(key: jax.Array, lam: jax.Array) -> jax.Array:
+    return workload.bernoulli_batch_arrivals(key, lam, 1)[0]
+
+
+def _arrival_constant(key: jax.Array, lam: jax.Array) -> jax.Array:
+    return workload.constant_arrivals(lam, 1)[0]
+
+
+ARRIVAL_MODELS: Dict[str, Callable] = {
+    "poisson": _arrival_poisson,
+    "bernoulli_batch": _arrival_bernoulli_batch,
+    "constant": _arrival_constant,
+}
+ARRIVAL_MODEL_ORDER: Tuple[str, ...] = tuple(ARRIVAL_MODELS)
+
+
+def arrival_code(name: str) -> int:
+    return ARRIVAL_MODEL_ORDER.index(name)
+
+
+# ---------------------------------------------------------------------------
+# Event models: (problem, t, key) -> (edge_scale [E], comp_scale [NC]).
+# `problem` is any StaticProblem/PaddedProblem duck type; scales multiply the
+# static capacities for this slot only (memoryless, O(1) state).
+# ---------------------------------------------------------------------------
+
+def _ev_static(sp, t: jax.Array, key: jax.Array):
+    E = sp.edges.shape[-2]
+    return jnp.ones((E,), jnp.float32), jnp.ones((sp.n_comp,), jnp.float32)
+
+
+def _ev_fading(sp, t: jax.Array, key: jax.Array,
+               period: float = 200.0, depth: float = 0.35):
+    """Deterministic per-link slow fading: capacity oscillates in
+    [1 - 2*depth, 1] with an edge-dependent phase."""
+    E = sp.edges.shape[-2]
+    phase = jnp.arange(E, dtype=jnp.float32) / jnp.float32(max(E, 1))
+    s = 1.0 - depth + depth * jnp.cos(
+        2.0 * jnp.pi * (t.astype(jnp.float32) / period + phase))
+    return s.astype(jnp.float32), jnp.ones((sp.n_comp,), jnp.float32)
+
+
+def _ev_link_flaps(sp, t: jax.Array, key: jax.Array, p_up: float = 0.9):
+    """i.i.d. per-slot link outages: each edge is up w.p. `p_up`."""
+    E = sp.edges.shape[-2]
+    up = jax.random.bernoulli(key, p_up, (E,)).astype(jnp.float32)
+    return up, jnp.ones((sp.n_comp,), jnp.float32)
+
+
+def _ev_comp_failures(sp, t: jax.Array, key: jax.Array, p_up: float = 0.9):
+    """i.i.d. per-slot comp-node failure/recovery: node computes w.p. `p_up`.
+    Failed nodes keep their queues (state is untouched) but combine nothing."""
+    E = sp.edges.shape[-2]
+    up = jax.random.bernoulli(key, p_up, (sp.n_comp,)).astype(jnp.float32)
+    return jnp.ones((E,), jnp.float32), up
+
+
+EVENT_MODELS: Dict[str, Callable] = {
+    "static": _ev_static,
+    "fading": _ev_fading,
+    "link_flaps": _ev_link_flaps,
+    "comp_failures": _ev_comp_failures,
+}
+EVENT_MODEL_ORDER: Tuple[str, ...] = tuple(EVENT_MODELS)
+
+
+def event_code(name: str) -> int:
+    return EVENT_MODEL_ORDER.index(name)
+
+
+# ---------------------------------------------------------------------------
+# Topology generators.  All are (seed, **params) -> ComputeProblem with
+# sources/dest/comp-node placement chosen by simple degree/eccentricity
+# heuristics so every instance is feasible (connected, lam* > 0).
+# ---------------------------------------------------------------------------
+
+def _place(graph: Graph, n_comp: int, C: float,
+           rng: np.random.Generator) -> ComputeProblem:
+    """Pick s1/s2 far apart, dest far from both, comp nodes by degree."""
+    n = graph.n_nodes
+    deg = np.zeros(n, np.int64)
+    for m, l in graph.edges:
+        deg[m] += 1
+        deg[l] += 1
+    # BFS eccentricity from a random start to find a far pair.
+    adj = [[] for _ in range(n)]
+    for m, l in graph.edges:
+        adj[m].append(int(l))
+        adj[l].append(int(m))
+
+    def bfs(src):
+        dist = np.full(n, -1)
+        dist[src] = 0
+        q = [src]
+        while q:
+            u = q.pop(0)
+            for v in adj[u]:
+                if dist[v] < 0:
+                    dist[v] = dist[u] + 1
+                    q.append(v)
+        return dist
+
+    s1 = int(rng.integers(n))
+    d1 = bfs(s1)
+    s2 = int(np.argmax(d1))
+    d2 = bfs(s2)
+    dest = int(np.argmax(d1 + d2))
+    if dest in (s1, s2):
+        dest = int(np.argsort(-(d1 + d2))[1])
+    # highest-degree nodes (excluding endpoints) host computation
+    order = np.argsort(-deg)
+    comp = [int(u) for u in order if u not in (s1, s2, dest)][:n_comp]
+    if len(comp) < n_comp:                       # tiny graphs: allow overlap
+        comp += [int(u) for u in order if int(u) not in comp][:n_comp - len(comp)]
+    return ComputeProblem(graph, s1, s2, dest,
+                          tuple(comp), (C,) * len(comp))
+
+
+def random_geometric(seed: int, n: int = 14, radius: float = 0.42,
+                     cap: float = 4.0, n_comp: int = 3,
+                     C: float = 2.0) -> ComputeProblem:
+    """Random geometric graph in the unit square; a chain over x-sorted nodes
+    is added so the graph is always connected."""
+    rng = np.random.default_rng(seed)
+    pts = rng.uniform(size=(n, 2))
+    order = np.argsort(pts[:, 0])
+    edges = set()
+    for i in range(n):
+        for j in range(i + 1, n):
+            if np.linalg.norm(pts[i] - pts[j]) <= radius:
+                edges.add((min(i, j), max(i, j)))
+    for a, b in zip(order[:-1], order[1:]):      # connectivity backbone
+        edges.add((min(int(a), int(b)), max(int(a), int(b))))
+    e = np.array(sorted(edges), np.int32)
+    g = Graph(n, e, np.full(len(e), cap))
+    return _place(g, n_comp, C, rng)
+
+
+def ring(seed: int, n: int = 12, cap: float = 4.0, n_comp: int = 3,
+         C: float = 2.0) -> ComputeProblem:
+    e = np.array([(i, (i + 1) % n) for i in range(n)], np.int32)
+    g = Graph(n, e, np.full(n, cap))
+    return _place(g, n_comp, C, np.random.default_rng(seed))
+
+
+def balanced_tree(seed: int, branch: int = 2, depth: int = 3, cap: float = 4.0,
+                  n_comp: int = 3, C: float = 2.0) -> ComputeProblem:
+    """Complete `branch`-ary tree of the given depth."""
+    edges, nodes = [], 1
+    frontier = [0]
+    for _ in range(depth):
+        nxt = []
+        for u in frontier:
+            for _ in range(branch):
+                edges.append((u, nodes))
+                nxt.append(nodes)
+                nodes += 1
+        frontier = nxt
+    e = np.array(edges, np.int32)
+    g = Graph(nodes, e, np.full(len(e), cap))
+    return _place(g, n_comp, C, np.random.default_rng(seed))
+
+
+def expander(seed: int, n: int = 14, cap: float = 4.0, n_comp: int = 3,
+             C: float = 2.0) -> ComputeProblem:
+    """Circulant expander: ring + chord offsets (2, n//2 - 1) + random chords."""
+    rng = np.random.default_rng(seed)
+    edges = set()
+    for off in (1, 2, max(n // 2 - 1, 3)):
+        for i in range(n):
+            j = (i + off) % n
+            if i != j:
+                edges.add((min(i, j), max(i, j)))
+    for _ in range(n // 3):                      # extra random chords
+        i, j = rng.integers(n), rng.integers(n)
+        if i != j:
+            edges.add((min(int(i), int(j)), max(int(i), int(j))))
+    e = np.array(sorted(edges), np.int32)
+    g = Graph(n, e, np.full(len(e), cap))
+    return _place(g, n_comp, C, rng)
+
+
+def fat_tree(seed: int, pods: int = 2, hosts_per_edge: int = 2,
+             core_cap: float = 8.0, agg_cap: float = 4.0,
+             host_cap: float = 4.0, C: float = 2.0) -> ComputeProblem:
+    """Miniature datacenter fat-tree: core -> per-pod agg -> edge -> hosts.
+    Computation lives in the aggregation layer (in-network processing)."""
+    edges, caps = [], []
+    core, n = 0, 1                # node 0 is the single core of the mini tree
+    aggs, hosts = [], []
+    for _ in range(pods):
+        agg = n; n += 1
+        aggs.append(agg)
+        edges.append((core, agg)); caps.append(core_cap)
+        for _ in range(2):
+            sw = n; n += 1
+            edges.append((agg, sw)); caps.append(agg_cap)
+            for _ in range(hosts_per_edge):
+                h = n; n += 1
+                hosts.append(h)
+                edges.append((sw, h)); caps.append(host_cap)
+    g = Graph(n, np.array(edges, np.int32), np.array(caps))
+    s1, s2 = int(hosts[0]), int(hosts[-1])       # opposite pods
+    dest = int(hosts[len(hosts) // 2])
+    if dest in (s1, s2):
+        dest = int(hosts[1])
+    return ComputeProblem(g, s1, s2, dest, tuple(aggs), (C,) * len(aggs))
+
+
+def wireless_grid(seed: int, rows: int = 4, cols: int = 4, cap: float = 5.0,
+                  C: float = 2.0) -> ComputeProblem:
+    """The paper-§IV-C setting: grid graph under node-exclusive interference
+    (pair with `wireless=True` in the scenario)."""
+    g = grid_graph(rows, cols, cap)
+    rng = np.random.default_rng(seed)
+    return _place(g, n_comp=4, C=C, rng=rng)
+
+
+# ---------------------------------------------------------------------------
+# Scenario registry.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    name: str
+    factory: Callable[[int], ComputeProblem]     # topo seed -> problem
+    arrival: str = "poisson"                     # ARRIVAL_MODELS key
+    events: str = "static"                       # EVENT_MODELS key
+    wireless: bool = False
+    description: str = ""
+
+    def build(self, topo_seed: int = 0) -> ComputeProblem:
+        return self.factory(topo_seed)
+
+
+SCENARIOS: Dict[str, Scenario] = {}
+
+
+def register_scenario(s: Scenario) -> Scenario:
+    if s.name in SCENARIOS:
+        raise ValueError(f"scenario {s.name!r} already registered")
+    if s.arrival not in ARRIVAL_MODELS:
+        raise ValueError(f"unknown arrival model {s.arrival!r}")
+    if s.events not in EVENT_MODELS:
+        raise ValueError(f"unknown event model {s.events!r}")
+    SCENARIOS[s.name] = s
+    return s
+
+
+def get_scenario(name: str) -> Scenario:
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r}; known: {sorted(SCENARIOS)}") from None
+
+
+def list_scenarios() -> list[str]:
+    return sorted(SCENARIOS)
+
+
+register_scenario(Scenario(
+    "paper_grid", lambda seed: paper_grid_problem(),
+    description="The paper's 4x4 grid (Fig. 5a), C=2, R=5."))
+register_scenario(Scenario(
+    "random_geometric", random_geometric,
+    description="Random geometric graph, degree-placed comp nodes."))
+register_scenario(Scenario(
+    "ring", ring, description="Cycle topology; worst-case path diversity."))
+register_scenario(Scenario(
+    "tree", balanced_tree,
+    description="Complete binary tree; single-path routing stress."))
+register_scenario(Scenario(
+    "expander", expander,
+    description="Circulant expander + random chords; high conductance."))
+register_scenario(Scenario(
+    "fat_tree", fat_tree, arrival="bernoulli_batch",
+    description="Mini datacenter fat-tree; bursty arrivals, agg-layer compute."))
+register_scenario(Scenario(
+    "wireless_grid", wireless_grid, wireless=True,
+    description="Grid under node-exclusive interference (greedy matching)."))
+register_scenario(Scenario(
+    "fading_geometric", random_geometric, events="fading",
+    description="Random geometric graph with sinusoidal link fading."))
+register_scenario(Scenario(
+    "flaky_expander", expander, events="link_flaps",
+    description="Expander with i.i.d. per-slot link outages."))
+register_scenario(Scenario(
+    "failing_grid", lambda seed: paper_grid_problem(), events="comp_failures",
+    description="Paper grid with comp-node failure/recovery."))

@@ -1,5 +1,7 @@
-from .simulator import SimResult, simulate, sweep_rates, build_step
+from .simulator import (SimResult, simulate, sweep_rates, build_step,
+                        make_step, make_trace_runner)
 from .workload import poisson_arrivals, bernoulli_batch_arrivals, constant_arrivals
 
 __all__ = ["SimResult", "simulate", "sweep_rates", "build_step",
+           "make_step", "make_trace_runner",
            "poisson_arrivals", "bernoulli_batch_arrivals", "constant_arrivals"]

@@ -1,7 +1,10 @@
 """Slot-level simulator: the whole queue network as one `lax.scan` program.
 
 The simulator is a single jit'd XLA program; sweeps over query rates run as
-`vmap` over lambda, so a full Fig.-5b curve is one device launch.
+`vmap` over lambda, so a full Fig.-5b curve is one device launch.  The scan
+body is shared between `simulate`, `sweep_rates`, and the fleet engine
+(`repro.fleet.engine`), which swaps the O(T) trace outputs for online
+accumulators.
 """
 from __future__ import annotations
 
@@ -32,15 +35,30 @@ class SimResult(NamedTuple):
         return self.total_queue.mean()
 
     def useful_rate(self, window: int | None = None) -> jax.Array:
-        """Delivered-useful throughput over the trailing `window` slots."""
+        """Delivered-useful throughput over the trailing `window` slots.
+
+        The baseline is the cumulative count at the last slot *before* the
+        window begins (positive index T-1-window); for `window >= T` the
+        implicit pre-trace baseline is 0, i.e. the full-trace average.  The
+        explicit positive index replaces the seed's equivalent negative-index
+        form `d[-window - 1]`, which sat exactly on the `-T` boundary at
+        `window == T - 1` and would wrap for any larger un-guarded window.
+        Regression-pinned in tests/test_fleet.py::TestUsefulRate.
+        """
         d = self.delivered_useful
-        if window is None or window >= d.shape[0]:
-            return d[-1] / d.shape[0]
-        return (d[-1] - d[-window - 1]) / window
+        T = d.shape[0]
+        if window is None or window >= T:
+            return d[-1] / T
+        start = T - 1 - window        # last slot before the window begins
+        return (d[-1] - d[start]) / window
 
 
-def build_step(problem: ComputeProblem, cfg: PolicyConfig) -> Callable:
-    sp = StaticProblem.build(problem)
+def make_step(sp: StaticProblem, cfg: PolicyConfig) -> Callable:
+    """The shared `lax.scan` body: one slot, emitting the metric tuple.
+
+    Works for both a seed `StaticProblem` (numpy constants) and a fleet
+    `PaddedProblem` (traced pytree leaves with edge/comp masks).
+    """
 
     def step(state: NetState, inputs):
         arrivals, key = inputs
@@ -50,7 +68,30 @@ def build_step(problem: ComputeProblem, cfg: PolicyConfig) -> Callable:
                metrics["n_star"])
         return state, out
 
-    return sp, step
+    return step
+
+
+def make_trace_runner(sp: StaticProblem, cfg: PolicyConfig) -> Callable:
+    """One jitted runner `(arrivals [T], key) -> SimResult` shared by
+    `simulate` and (under vmap) `sweep_rates`."""
+    step = make_step(sp, cfg)
+
+    @jax.jit
+    def run(arrivals: jax.Array, key: jax.Array) -> SimResult:
+        T = arrivals.shape[0]
+        keys = jax.random.split(key, T)
+        state = init_state(sp)
+        final, (tq, dlv, dlvu, comp, nstar) = jax.lax.scan(
+            step, state, (arrivals, keys))
+        return SimResult(final, tq, dlv, dlvu, comp, nstar)
+
+    return run
+
+
+def build_step(problem: ComputeProblem, cfg: PolicyConfig):
+    """Backwards-compatible helper: (StaticProblem, scan body)."""
+    sp = StaticProblem.build(problem)
+    return sp, make_step(sp, cfg)
 
 
 def simulate(problem: ComputeProblem, cfg: PolicyConfig, lam: float, T: int,
@@ -60,16 +101,10 @@ def simulate(problem: ComputeProblem, cfg: PolicyConfig, lam: float, T: int,
     akey, skey = jax.random.split(key)
     if arrivals is None:
         arrivals = poisson_arrivals(akey, lam, T)
-    sp, step = build_step(problem, cfg)
-
-    @jax.jit
-    def run(arrivals, key):
-        keys = jax.random.split(key, T)
-        state = init_state(sp)
-        final, (tq, dlv, dlvu, comp, nstar) = jax.lax.scan(
-            step, state, (arrivals, keys))
-        return SimResult(final, tq, dlv, dlvu, comp, nstar)
-
+    elif arrivals.shape[0] != T:
+        raise ValueError(
+            f"arrivals trace has {arrivals.shape[0]} slots but T={T}")
+    run = make_trace_runner(StaticProblem.build(problem), cfg)
     return run(arrivals, skey)
 
 
@@ -82,14 +117,5 @@ def sweep_rates(problem: ComputeProblem, cfg: PolicyConfig, lams, T: int,
     arr = jax.vmap(lambda l, k: poisson_arrivals(k, l, T))(
         lams, jax.random.split(akey, lams.shape[0]))
 
-    sp, step = build_step(problem, cfg)
-
-    @jax.jit
-    def run_one(arrivals, key):
-        keys = jax.random.split(key, T)
-        state = init_state(sp)
-        final, (tq, dlv, dlvu, comp, nstar) = jax.lax.scan(
-            step, state, (arrivals, keys))
-        return SimResult(final, tq, dlv, dlvu, comp, nstar)
-
-    return jax.vmap(run_one)(arr, jax.random.split(skey, lams.shape[0]))
+    run = make_trace_runner(StaticProblem.build(problem), cfg)
+    return jax.vmap(run)(arr, jax.random.split(skey, lams.shape[0]))

@@ -1,0 +1,319 @@
+"""Fleet subsystem tests: padded batching equivalence, mask semantics,
+streaming (chunked-scan) metrics vs the trace simulator, scenario registry,
+and the sharded engine smoke run (marker: fleet_smoke)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ComputeProblem, PolicyConfig, paper_grid_problem,
+                        triangle_graph)
+from repro.core.policies import bp_route_slot, load_balance_slot
+from repro.core.queues import StaticProblem, init_state
+from repro.sim import SimResult, simulate
+from repro.sim.simulator import make_trace_runner
+from repro.sim.workload import poisson_arrivals
+from repro.fleet import (FleetJob, PadDims, get_scenario, list_scenarios,
+                         make_stream_runner, pad_problem, run_fleet,
+                         stack_problems, stream_simulate)
+from repro.fleet.scenarios import (ARRIVAL_MODEL_ORDER, EVENT_MODELS,
+                                   EVENT_MODEL_ORDER, SCENARIOS)
+
+TRI = ComputeProblem(triangle_graph(4.0), s1=0, s2=1, dest=2,
+                     comp_nodes=(2,), comp_caps=(2.0,))
+
+
+# ---------------------------------------------------------------------------
+# useful_rate regression (satellite: off-by-one / wraparound)
+# ---------------------------------------------------------------------------
+
+class TestUsefulRate:
+    def _result(self, du):
+        du = jnp.asarray(du, jnp.float32)
+        zeros = jnp.zeros_like(du)
+        return SimResult(None, zeros, du, du, zeros, zeros)
+
+    def test_constant_rate_for_every_window(self):
+        """With one delivery per slot, every window must report rate 1."""
+        T = 16
+        res = self._result(jnp.arange(1, T + 1))
+        for w in [1, 2, T // 2, T - 2, T - 1, T, T + 5, None]:
+            assert float(res.useful_rate(w)) == pytest.approx(1.0)
+
+    def test_boundary_window_does_not_wrap(self):
+        """A huge early value must not leak into a trailing window via
+        negative-index wraparound."""
+        d = np.zeros(10, np.float32)
+        d[0] = 1e6                     # burst in slot 0
+        d = np.cumsum(np.r_[d[:1], np.ones(9, np.float32)]) - 1 + d[0]
+        res = self._result(d)
+        # windows that exclude slot 0 only see the 1-per-slot tail
+        for w in (1, 4, 8):
+            assert float(res.useful_rate(w)) == pytest.approx(1.0)
+        # the full trace includes the burst
+        assert float(res.useful_rate(None)) > 1e4
+
+
+# ---------------------------------------------------------------------------
+# Padded batching
+# ---------------------------------------------------------------------------
+
+class TestPaddedBatching:
+    def test_exact_dims_match_seed_all_policies(self):
+        """Padding with the instance's own dims is a pure re-encoding: every
+        policy reproduces the seed simulator bit-for-bit."""
+        p = paper_grid_problem()
+        T = 150
+        key = jax.random.key(0)
+        ak, sk = jax.random.split(key)
+        arr = poisson_arrivals(ak, 5.0, T)
+        pp = pad_problem(p, PadDims(p.graph.n_nodes, p.graph.n_edges, p.n_comp))
+        for name in ("pi1", "pi2", "pi3", "pi3bar"):
+            cfg = PolicyConfig(name=name)
+            r_seed = simulate(p, cfg, 5.0, T, seed=0)
+            r_pad = make_trace_runner(pp, cfg)(arr, sk)
+            np.testing.assert_allclose(np.asarray(r_seed.total_queue),
+                                       np.asarray(r_pad.total_queue),
+                                       rtol=1e-6, err_msg=name)
+
+    def test_padding_is_inert_for_keyfree_policies(self):
+        """Extra padded nodes/edges/comp slots change nothing for policies
+        that draw no randomness (the regulator's per-node draw is shape-
+        sensitive, so pi2/pi3 are only statistically equivalent)."""
+        p = paper_grid_problem()
+        T = 150
+        key = jax.random.key(1)
+        ak, sk = jax.random.split(key)
+        arr = poisson_arrivals(ak, 5.0, T)
+        big = pad_problem(p, PadDims(24, 48, 7))
+        for name in ("pi1", "pi3bar"):
+            cfg = PolicyConfig(name=name)
+            r_seed = simulate(p, cfg, 5.0, T, seed=1)
+            r_pad = make_trace_runner(big, cfg)(arr, sk)
+            np.testing.assert_allclose(np.asarray(r_seed.total_queue),
+                                       np.asarray(r_pad.total_queue),
+                                       rtol=1e-6, err_msg=name)
+            np.testing.assert_allclose(
+                float(r_seed.delivered_useful[-1]),
+                float(r_pad.delivered_useful[-1]), rtol=1e-6)
+
+    def test_stacked_batch_vmaps(self):
+        problems = [TRI, paper_grid_problem(),
+                    get_scenario("ring").build(0)]
+        batch = stack_problems(problems)
+        assert batch.edges.shape[0] == 3
+        cfg = PolicyConfig(name="pi3bar")
+        T = 64
+        arr = jnp.ones((3, T), jnp.float32)
+        keys = jax.random.split(jax.random.key(0), 3)
+
+        def run_one(pp, a, k):
+            return make_trace_runner(pp, cfg)(a, k).delivered_useful[-1]
+
+        out = jax.vmap(run_one)(batch, arr, keys)
+        assert out.shape == (3,)
+        assert np.all(np.asarray(out) >= 0.0)
+
+    def test_masked_edge_carries_no_flow(self):
+        """Zeroing an edge's mask is equivalent to removing the link."""
+        import dataclasses as _dc
+        sp = StaticProblem.build(TRI)
+        state = init_state(sp)
+        # put backlog on node 0 so the (0,1) and (0,2) links want to fire
+        state = state._replace(Q=state.Q.at[0, 1, 0].set(50.0))
+        masked = _dc.replace(sp, edge_mask=np.array([0.0, 0.0, 1.0], np.float32))
+        new_masked, _ = bp_route_slot(masked, state)
+        new_open, _ = bp_route_slot(sp, state)
+        # with links (0,1), (0,2) masked, node 0's raw backlog cannot move
+        assert float(new_masked.Q[0, 1, 0]) == pytest.approx(50.0)
+        assert float(new_open.Q[0, 1, 0]) < 50.0
+
+    def test_zero_capacity_link_frees_wireless_matching_slot(self):
+        """A link whose capacity an event model zeroed must not win a
+        greedy-matching slot and idle its endpoints (reviewed regression)."""
+        import dataclasses as _dc
+        from repro.core import line_graph
+        p = ComputeProblem(line_graph(3, 1.0), 0, 1, 2, (1,), (1.0,))
+        sp = StaticProblem.build(p)
+        down = _dc.replace(sp, edge_cap=np.array([0.0, 1.0], np.float32))
+        state = init_state(sp)
+        # edge (0,1) has the larger differential backlog but zero capacity;
+        # edge (1,2) must still transmit even though it shares node 1
+        state = state._replace(
+            Q=state.Q.at[0, 1, 0].set(50.0).at[1, 2, 0].set(30.0))
+        new, _ = bp_route_slot(down, state, wireless=True)
+        assert float(new.Q[1, 2, 0]) < 30.0
+
+    def test_masked_comp_node_never_selected(self):
+        p = paper_grid_problem()
+        sp = StaticProblem.build(p)
+        import dataclasses as _dc
+        mask = np.array([1.0, 0.0, 1.0, 0.0], np.float32)
+        masked = _dc.replace(sp, comp_mask=mask)
+        cfg = PolicyConfig(name="pi3")
+        state = init_state(sp)
+        picks = set()
+        for a in range(20):
+            _, _, m = load_balance_slot(masked, cfg, state,
+                                        jnp.float32(1.0 + a))
+            picks.add(int(m["n_star"]))
+        assert picks <= {0, 2}
+
+
+# ---------------------------------------------------------------------------
+# Streaming engine (chunked scan + online accumulators)
+# ---------------------------------------------------------------------------
+
+class TestStreaming:
+    def test_matches_trace_simulator_100k_slots(self):
+        """Acceptance: T=100k chunked-scan run matches the seed simulator's
+        delivered_useful on an identical arrival trace to <= 1e-3 relative."""
+        T = 100_000
+        cfg = PolicyConfig(name="pi3bar")
+        key = jax.random.key(3)
+        arr = poisson_arrivals(key, 1.5, T)
+        r_seed = simulate(TRI, cfg, 1.5, T, seed=3, arrivals=arr)
+        out = stream_simulate(TRI, cfg, 1.5, T, chunk=1000, seed=3,
+                              arrivals=arr)
+        du_seed = float(r_seed.delivered_useful[-1])
+        du_stream = float(out["delivered_useful"])
+        assert abs(du_seed - du_stream) / max(du_seed, 1.0) <= 1e-3
+        # windowed rate consistency with the trace-side computation
+        assert float(out["useful_rate"]) == pytest.approx(
+            float(r_seed.useful_rate(T // 2)), rel=1e-3)
+
+    def test_no_T_shaped_metric_arrays(self):
+        """The compiled streaming program must hold no array with a horizon-
+        sized dimension: metrics are online accumulators only."""
+        T, chunk = 100_000, 1000
+        cfg = PolicyConfig(name="pi3")
+        run = make_stream_runner(cfg, T, chunk=chunk)
+        pp = pad_problem(TRI, PadDims.of([TRI]))
+        jaxpr = jax.make_jaxpr(
+            functools.partial(run, arrivals=None))(
+                pp, jnp.float32(1.0), jnp.int32(0), jnp.int32(0),
+                jax.random.PRNGKey(0))
+
+        def max_dim(jxp):
+            dims = [0]
+            for eqn in jxp.eqns:
+                for v in list(eqn.outvars) + list(eqn.invars):
+                    aval = getattr(v, "aval", None)
+                    if aval is not None and getattr(aval, "shape", None):
+                        dims.extend(d for d in aval.shape
+                                    if isinstance(d, int))
+                for p in eqn.params.values():
+                    inner = getattr(p, "jaxpr", None)
+                    if inner is not None:
+                        dims.append(max_dim(inner))
+            return max(dims)
+
+        biggest = max_dim(jaxpr.jaxpr)
+        assert biggest < chunk + 1, (
+            f"streaming program materializes a {biggest}-sized axis")
+
+    def test_stability_verdict(self):
+        # far below capacity: stable; far above: unstable
+        cfg = PolicyConfig(name="pi3bar")
+        lo = stream_simulate(TRI, cfg, 1.0, 3000, chunk=500, seed=0)
+        hi = stream_simulate(TRI, cfg, 4.0, 3000, chunk=500, seed=0)
+        assert float(lo["stable"]) == 1.0
+        assert float(hi["stable"]) == 0.0
+        assert float(hi["mean_queue_tail"]) > float(hi["mean_queue_mid"])
+
+    def test_horizon_rounds_up_to_chunks(self):
+        run = make_stream_runner(PolicyConfig(name="pi1"), T=1001, chunk=100)
+        assert run.T == 1100 and run.chunk == 100
+
+
+# ---------------------------------------------------------------------------
+# Scenario registry
+# ---------------------------------------------------------------------------
+
+class TestScenarios:
+    def test_registry_contents(self):
+        names = list_scenarios()
+        for expected in ("paper_grid", "random_geometric", "ring", "tree",
+                         "expander", "fat_tree", "wireless_grid"):
+            assert expected in names
+
+    @pytest.mark.parametrize("name", sorted(SCENARIOS))
+    def test_every_scenario_builds_valid_problems(self, name):
+        for seed in (0, 1):
+            p = get_scenario(name).build(seed)
+            assert isinstance(p, ComputeProblem)
+            # endpoints distinct enough to pose a real routing problem
+            assert p.s1 != p.s2
+            assert p.n_comp >= 1
+            # connected: BFS from s1 reaches everything
+            adj = [[] for _ in range(p.graph.n_nodes)]
+            for m, l in p.graph.edges:
+                adj[m].append(int(l))
+                adj[l].append(int(m))
+            seen, stack = {p.s1}, [p.s1]
+            while stack:
+                for v in adj[stack.pop()]:
+                    if v not in seen:
+                        seen.add(v)
+                        stack.append(v)
+            assert len(seen) == p.graph.n_nodes, f"{name} disconnected"
+
+    def test_topology_seeds_vary_random_graphs(self):
+        a = get_scenario("random_geometric").build(0)
+        b = get_scenario("random_geometric").build(1)
+        assert (a.graph.n_edges != b.graph.n_edges or
+                not np.array_equal(a.graph.edges, b.graph.edges))
+
+    def test_event_models_shapes_and_ranges(self):
+        pp = pad_problem(TRI, PadDims.of([TRI]))
+        key = jax.random.key(0)
+        for name in EVENT_MODEL_ORDER:
+            es, cs = EVENT_MODELS[name](pp, jnp.int32(17), key)
+            assert es.shape == (pp.n_edges,)
+            assert cs.shape == (pp.n_comp,)
+            assert float(es.min()) >= 0.0 and float(es.max()) <= 1.0 + 1e-6
+            assert float(cs.min()) >= 0.0 and float(cs.max()) <= 1.0 + 1e-6
+        # static model is the identity
+        es, cs = EVENT_MODELS["static"](pp, jnp.int32(0), key)
+        assert float(es.min()) == 1.0 and float(cs.min()) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Sharded engine (CI smoke: works on 1 device; scripts/test.sh gives it 8)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.fleet_smoke
+class TestFleetEngine:
+    def test_sweep_mixed_scenarios_one_program_per_policy(self):
+        jobs = [FleetJob(scenario=s, policy=pol, lam=lam, seed=seed)
+                for s in ("paper_grid", "ring", "fat_tree")
+                for pol in ("pi3", "pi3bar")
+                for lam in (1.0, 2.5)
+                for seed in (0,)]
+        res = run_fleet(jobs, T=256, chunk=64)
+        assert res.n_sims == len(jobs) == 12
+        # one compiled program per policy group, not per topology
+        assert res.n_programs == 2
+        useful = res.column("useful_rate")
+        assert useful.shape == (12,)
+        assert np.all(np.isfinite(useful)) and np.all(useful >= 0.0)
+        assert np.all(np.isfinite(res.column("mean_queue")))
+
+    def test_batch_not_divisible_by_mesh(self):
+        """Odd job counts are padded onto the mesh and trimmed back."""
+        n = len(jax.devices()) + 1 if len(jax.devices()) > 1 else 3
+        jobs = [FleetJob(scenario="paper_grid", policy="pi3bar",
+                         lam=1.0 + 0.5 * i, seed=i) for i in range(n)]
+        res = run_fleet(jobs, T=128, chunk=64)
+        assert res.n_sims == n
+        assert len(res.metrics) == n
+        offered = res.column("offered")
+        np.testing.assert_allclose(offered, [1.0 + 0.5 * i for i in range(n)])
+
+    def test_wireless_scenario_forms_own_group(self):
+        jobs = [FleetJob(scenario="paper_grid", policy="pi3", lam=1.0),
+                FleetJob(scenario="wireless_grid", policy="pi3", lam=1.0)]
+        res = run_fleet(jobs, T=128, chunk=64)
+        assert res.n_programs == 2

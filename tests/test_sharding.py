@@ -105,5 +105,13 @@ def test_mini_dryrun_8_devices():
 
 
 def test_main_process_sees_one_device():
-    # the 512-device flag must never leak outside launch/dryrun
-    assert jax.device_count() == 1
+    # the 512-device dryrun flag must never leak outside launch/dryrun; the
+    # test process itself may legitimately run with a small fake-device mesh
+    # (scripts/test.sh sets --xla_force_host_platform_device_count=8).
+    import re
+    counts = re.findall(r"--xla_force_host_platform_device_count=(\d+)",
+                        os.environ.get("XLA_FLAGS", ""))
+    # XLA honors the LAST occurrence when the flag is repeated
+    expected = int(counts[-1]) if counts else 1
+    assert jax.device_count() == expected
+    assert jax.device_count() < 512

@@ -1,6 +1,10 @@
 """Hypothesis property tests on the queue-network invariants."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="hypothesis not installed (pip install -e .[dev])")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (ComputeProblem, PolicyConfig, grid_graph,

@@ -1,0 +1,83 @@
+"""Arrival-process statistics and randomized greedy-matching properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.graph import grid_graph
+from repro.core.policies import greedy_maximal_matching
+from repro.sim.workload import (bernoulli_batch_arrivals, constant_arrivals,
+                                poisson_arrivals)
+
+
+class TestBernoulliBatchArrivals:
+    @pytest.mark.parametrize("lam,batch", [(0.5, 4), (1.0, 4), (2.0, 8),
+                                           (3.5, 4)])
+    def test_mean_rate(self, lam, batch):
+        """E[A(t)] = lam as long as lam <= batch (p = lam/batch <= 1)."""
+        T = 40_000
+        arr = bernoulli_batch_arrivals(jax.random.key(0), lam, T, batch=batch)
+        assert float(arr.mean()) == pytest.approx(lam, rel=0.05)
+
+    def test_values_are_zero_or_batch(self):
+        arr = bernoulli_batch_arrivals(jax.random.key(1), 1.0, 5000, batch=4)
+        vals = set(np.unique(np.asarray(arr)).tolist())
+        assert vals <= {0.0, 4.0}
+
+    def test_rate_saturates_at_batch(self):
+        """p is clipped at 1: requesting lam > batch delivers exactly batch
+        every slot (the documented burst ceiling)."""
+        arr = bernoulli_batch_arrivals(jax.random.key(2), 10.0, 1000, batch=4)
+        assert float(arr.min()) == 4.0 and float(arr.max()) == 4.0
+
+    def test_other_processes_match_rates(self):
+        T = 40_000
+        pois = poisson_arrivals(jax.random.key(3), 2.0, T)
+        assert float(pois.mean()) == pytest.approx(2.0, rel=0.05)
+        const = constant_arrivals(1.7, 100)
+        assert float(const.min()) == float(const.max()) == pytest.approx(1.7)
+
+
+class TestGreedyMatchingProperties:
+    """Randomized invariants beyond the fixed cases in test_policies.py."""
+
+    @pytest.mark.parametrize("seed", range(6))
+    def test_node_exclusive_on_random_weights(self, seed):
+        g = grid_graph(4, 4, 1.0)
+        rng = np.random.default_rng(seed)
+        w = jnp.asarray(rng.uniform(0.0, 10.0, size=g.n_edges))
+        sel = np.asarray(greedy_maximal_matching(
+            jnp.asarray(g.edges), w, g.n_nodes))
+        used = np.zeros(g.n_nodes, int)
+        for (m, l), s in zip(g.edges, sel):
+            if s:
+                used[m] += 1
+                used[l] += 1
+        assert used.max() <= 1, "two active links share a node"
+
+    @pytest.mark.parametrize("seed", range(6))
+    def test_matching_is_maximal(self, seed):
+        """No positive-weight link with two free endpoints stays idle."""
+        g = grid_graph(3, 5, 1.0)
+        rng = np.random.default_rng(100 + seed)
+        w_np = rng.uniform(0.1, 5.0, size=g.n_edges)
+        sel = np.asarray(greedy_maximal_matching(
+            jnp.asarray(g.edges), jnp.asarray(w_np), g.n_nodes))
+        used = np.zeros(g.n_nodes, bool)
+        for (m, l), s in zip(g.edges, sel):
+            if s:
+                used[m] = used[l] = True
+        for (m, l), s in zip(g.edges, sel):
+            assert s or used[m] or used[l], (
+                f"link ({m},{l}) could have been activated")
+
+    @pytest.mark.parametrize("seed", range(4))
+    def test_zero_weight_links_never_activate(self, seed):
+        g = grid_graph(4, 4, 1.0)
+        rng = np.random.default_rng(200 + seed)
+        w_np = rng.uniform(0.0, 5.0, size=g.n_edges)
+        zero = rng.uniform(size=g.n_edges) < 0.5
+        w_np[zero] = 0.0
+        sel = np.asarray(greedy_maximal_matching(
+            jnp.asarray(g.edges), jnp.asarray(w_np), g.n_nodes))
+        assert not sel[zero].any()
