@@ -1,0 +1,86 @@
+#!/usr/bin/env python
+"""Docs consistency gate (CI: scripts/test.sh).
+
+1. Cross-reference check: every ``DESIGN.md §N`` / ``README.md §N``
+   reference in the source tree must resolve to a heading in that file
+   (a dangling reference is how "DESIGN.md §2" shipped for two PRs with
+   no DESIGN.md in the repo).
+2. Named-section check: prose references like ``README.md ("Fleet sweep
+   cookbook")`` must match a real heading.
+3. Doctests: the runnable snippets in README.md (and any in DESIGN.md)
+   are executed with ``doctest`` — run with PYTHONPATH=src.
+
+Exit code 0 iff everything resolves and every doctest passes.
+"""
+from __future__ import annotations
+
+import doctest
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+SCAN_DIRS = ("src", "tests", "benchmarks", "scripts", "examples")
+SCAN_TOP = ("README.md", "DESIGN.md", "ROADMAP.md", "ISSUE.md")
+DOC_FILES = ("README.md", "DESIGN.md")
+
+SECTION_REF = re.compile(r"(DESIGN|README)\.md\s+§(\d+)")
+NAMED_REF = re.compile(r"(DESIGN|README)\.md\s+\(\"([^\"]+)\"\)")
+
+
+def _headings(path: pathlib.Path) -> str:
+    return "\n".join(line for line in path.read_text().splitlines()
+                     if line.startswith("#"))
+
+
+def check_references() -> list[str]:
+    errors = []
+    heads = {f: _headings(ROOT / f) for f in DOC_FILES if (ROOT / f).exists()}
+    files = [p for d in SCAN_DIRS for p in (ROOT / d).rglob("*")
+             if p.suffix in (".py", ".md", ".sh") and p.is_file()]
+    files += [ROOT / f for f in SCAN_TOP if (ROOT / f).exists()]
+    for path in files:
+        text = path.read_text(errors="replace")
+        for m in SECTION_REF.finditer(text):
+            doc = f"{m.group(1)}.md"
+            if doc not in heads:
+                errors.append(f"{path}: references missing file {doc}")
+            elif f"§{m.group(2)}" not in heads[doc]:
+                errors.append(
+                    f"{path}: dangling reference {doc} §{m.group(2)}")
+        for m in NAMED_REF.finditer(text):
+            # normalize line-wrapped titles inside docstrings
+            doc = f"{m.group(1)}.md"
+            title = re.sub(r"\s+", " ", m.group(2))
+            if doc not in heads or title not in heads[doc]:
+                errors.append(
+                    f"{path}: dangling reference {doc} section {title!r}")
+    return errors
+
+
+def run_doctests() -> list[str]:
+    errors = []
+    for f in DOC_FILES:
+        path = ROOT / f
+        if not path.exists():
+            continue
+        res = doctest.testfile(str(path), module_relative=False,
+                               optionflags=doctest.NORMALIZE_WHITESPACE)
+        if res.failed:
+            errors.append(f"{f}: {res.failed}/{res.attempted} doctests failed")
+        else:
+            print(f"check_docs: {f}: {res.attempted} doctests passed")
+    return errors
+
+
+def main() -> int:
+    errors = check_references() + run_doctests()
+    for e in errors:
+        print(f"check_docs: ERROR: {e}", file=sys.stderr)
+    if not errors:
+        print("check_docs: all section references resolve")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -20,7 +20,7 @@ def get_config(arch: str) -> ModelConfig:
 
 def cells(include_skipped: bool = False):
     """All (arch, shape) dry-run cells; long_500k only for sub-quadratic
-    archs unless include_skipped (DESIGN.md §4)."""
+    archs unless include_skipped (DESIGN.md §5)."""
     out = []
     for name, mc in ARCHS.items():
         for sname, sc in SHAPES.items():

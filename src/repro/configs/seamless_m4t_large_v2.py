@@ -1,6 +1,6 @@
 """seamless-m4t-large-v2 [audio] — enc-dec backbone; the audio frontend is a
 STUB (input_specs provides precomputed frame embeddings). "24L" = 24 encoder
-+ 24 decoder layers (following the released checkpoint; see DESIGN.md §4).
++ 24 decoder layers (following the released checkpoint; see DESIGN.md §5).
 [arXiv:2308.11596; hf]"""
 from .base import ModelConfig
 

@@ -26,9 +26,25 @@ from .queues import NetState, StaticProblem
 from .regulator import regulator_push
 
 
+#: Policies that route computation output through the dummy-packet regulator.
+#: ``pi2_reg``/``pi3_reg`` are the fleet-facing names for the regulated
+#: variants: identical slot dynamics to pi2/pi3, but kept distinct so one
+#: sweep can carry both a plain and an explicitly-regulated entry and the
+#: report layer scores the ``_reg`` rows against the rho0-adjusted bound
+#: lam*/(1+eps_B) (DESIGN.md §2).
+REGULATED_POLICIES = ("pi2", "pi2_reg", "pi3", "pi3_reg")
+
+#: Every implemented policy name.  `PolicyConfig` rejects anything else at
+#: construction: the behavior flags below are exact-string membership
+#: tests, so a typo ("pi3reg") would otherwise silently run unregulated
+#: pi1-like dynamics and be scored against the wrong bound.
+KNOWN_POLICIES = ("pi1", "pi1p", "pi2", "pi2_reg", "pi3", "pi3_reg",
+                  "pi3bar")
+
+
 @dataclasses.dataclass(frozen=True)
 class PolicyConfig:
-    name: str = "pi3"            # pi1 | pi1p | pi2 | pi3 | pi3bar
+    name: str = "pi3"            # pi1 | pi1p | pi2[_reg] | pi3[_reg] | pi3bar
     eps_b: float = 0.01          # regulator Bernoulli parameter
     pairing: str = "fifo"        # fifo | bound   (DESIGN.md §1)
     threshold: float = 0.0       # X̄ for the primed (proof-device) variants
@@ -37,17 +53,31 @@ class PolicyConfig:
                                  # activated by greedy maximal matching
                                  # weighted by differential backlog [17,18]
 
+    def __post_init__(self):
+        if self.name not in KNOWN_POLICIES:
+            raise ValueError(
+                f"unknown policy {self.name!r}; known: {KNOWN_POLICIES}")
+
     @property
     def use_regulator(self) -> bool:
-        return self.name in ("pi2", "pi3")
+        return self.name in REGULATED_POLICIES
 
     @property
     def load_balance(self) -> bool:
-        return self.name in ("pi3", "pi3bar")
+        return self.name in ("pi3", "pi3_reg", "pi3bar")
 
     @property
     def thresholded(self) -> bool:
         return self.name == "pi1p"
+
+    @property
+    def rho0(self) -> float:
+        """Output-rate inflation rho0 = 1 + eps_B (paper eq. (8), Thm 3/5).
+
+        The operative throughput bound of a regulated policy is
+        lam*/rho0; unregulated policies are bounded by lam* itself.
+        """
+        return 1.0 + self.eps_b if self.use_regulator else 1.0
 
 
 # ---------------------------------------------------------------------------
@@ -148,11 +178,8 @@ def bp_route_slot(sp: StaticProblem, state: NetState,
     dlv = jnp.sum(actual * proc_sink)
     dlv_useful = jnp.sum((actual - moved_dummy) * proc_sink)
 
-    new = state._replace(
-        Q=Q, Ddum=Ddum, X=X, cum_arr=cum_arr,
-        delivered=state.delivered + dlv,
-        delivered_useful=state.delivered_useful + dlv_useful,
-    )
+    new = state._replace(Q=Q, Ddum=Ddum, X=X, cum_arr=cum_arr)
+    new = new.credit_delivery(dlv, dlv_useful)
     return new, {"routed": jnp.sum(actual)}
 
 
@@ -185,17 +212,19 @@ def _inject_processed(sp: StaticProblem, state: NetState, amount: jax.Array,
     Ddum = state.Ddum.at[comp, nidx].add(dummy * (~at_dest))
     dlv = jnp.sum(amount * at_dest)
     dlv_useful = jnp.sum((amount - dummy) * at_dest)
-    return state._replace(
-        Q=Q, Ddum=Ddum,
-        delivered=state.delivered + dlv,
-        delivered_useful=state.delivered_useful + dlv_useful,
-    )
+    return state._replace(Q=Q, Ddum=Ddum).credit_delivery(dlv, dlv_useful)
 
 
 def computation_slot(sp: StaticProblem, cfg: PolicyConfig, state: NetState,
-                     assigned: jax.Array, key: jax.Array) -> Tuple[NetState, Dict]:
+                     assigned: jax.Array, key: jax.Array,
+                     eps_b: jax.Array | None = None) -> Tuple[NetState, Dict]:
     """Combine pairs at every computation node; route output via the
-    regulator (pi2/pi3) or directly (pi1/pi3bar)."""
+    regulator (pi2/pi3 and their ``_reg`` aliases) or directly (pi1/pi3bar).
+
+    `eps_b` optionally overrides `cfg.eps_b` with a *traced* value: the fleet
+    engine passes it per job so sweeping the regulator parameter does not
+    fork compiled programs (only `cfg.use_regulator` changes control flow).
+    """
     caps = jnp.asarray(sp.comp_caps)
     if sp.comp_mask is not None:
         caps = caps * jnp.asarray(sp.comp_mask, jnp.float32)
@@ -215,8 +244,9 @@ def computation_slot(sp: StaticProblem, cfg: PolicyConfig, state: NetState,
     state = state._replace(X=X, cum_comb=cum_comb)
 
     if cfg.use_regulator:
+        eps = cfg.eps_b if eps_b is None else eps_b
         Y = state.Y + Z
-        Y, F, dummy = regulator_push(Y, assigned, key, cfg.eps_b)
+        Y, F, dummy = regulator_push(Y, assigned, key, eps)
         state = state._replace(Y=Y)
         state = _inject_processed(sp, state, F, dummy)
     else:
@@ -230,12 +260,16 @@ def computation_slot(sp: StaticProblem, cfg: PolicyConfig, state: NetState,
 # ---------------------------------------------------------------------------
 
 def load_balance_slot(sp: StaticProblem, cfg: PolicyConfig, state: NetState,
-                      arrivals: jax.Array) -> Tuple[NetState, jax.Array, Dict]:
+                      arrivals: jax.Array,
+                      eps_b: jax.Array | None = None
+                      ) -> Tuple[NetState, jax.Array, Dict]:
     """Assign this slot's A(t) queries to a computation node and inject the
-    corresponding raw packets at the sources."""
+    corresponding raw packets at the sources.  `eps_b` optionally overrides
+    `cfg.eps_b` with a traced per-job value (see `computation_slot`)."""
     if cfg.load_balance:
-        score = ((1.0 + cfg.eps_b) * state.Q[jnp.asarray(sp.comp_nodes), 0,
-                                             jnp.arange(sp.n_comp)]
+        eps = cfg.eps_b if eps_b is None else eps_b
+        score = ((1.0 + eps) * state.Q[jnp.asarray(sp.comp_nodes), 0,
+                                       jnp.arange(sp.n_comp)]
                  + state.Q[sp.s1, 1, :] + state.Q[sp.s2, 2, :]
                  + state.H)                                        # eq. (9)
         if sp.comp_mask is not None:
@@ -268,12 +302,14 @@ def load_balance_slot(sp: StaticProblem, cfg: PolicyConfig, state: NetState,
 # ---------------------------------------------------------------------------
 
 def slot_step(sp: StaticProblem, cfg: PolicyConfig, state: NetState,
-              arrivals: jax.Array, key: jax.Array) -> Tuple[NetState, Dict]:
+              arrivals: jax.Array, key: jax.Array,
+              eps_b: jax.Array | None = None) -> Tuple[NetState, Dict]:
     """One slot: (i) admit+load-balance, (ii) BP routing, (iii) computation
-    (+ regulator push)."""
-    state, assigned, m1 = load_balance_slot(sp, cfg, state, arrivals)
+    (+ regulator push).  `eps_b=None` uses the static `cfg.eps_b`; a traced
+    array makes the regulator parameter per-job data (fleet sweeps)."""
+    state, assigned, m1 = load_balance_slot(sp, cfg, state, arrivals, eps_b)
     state, m2 = bp_route_slot(sp, state, wireless=cfg.wireless)
-    state, m3 = computation_slot(sp, cfg, state, assigned, key)
+    state, m3 = computation_slot(sp, cfg, state, assigned, key, eps_b)
     metrics = {
         "total_queue": state.total_queue(),
         "delivered": state.delivered,

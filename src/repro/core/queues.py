@@ -13,6 +13,13 @@ State components (paper notation):
   cum_arr[n,i] : cumulative raw arrivals into X[n, i]  (for FIFO pairing)
   cum_comb[n]  : cumulative pairs combined at n
   delivered / delivered_useful : cumulative processed packets at d
+
+The delivery counters are *compensated* (Kahan) float32 sums: `delivered`
+carries the running total and `delivered_c` the rounding residue, so
+per-slot increments survive far past the naive float32 saturation point
+(~2^24 ≈ 1.7e7 packets, where `big + 1.0 == big`).  Read them through
+`state.delivered`; update them only through `state.credit_delivery`
+(DESIGN.md §4).
 """
 from __future__ import annotations
 
@@ -26,6 +33,17 @@ import numpy as np
 from .graph import ComputeProblem
 
 
+def kahan_add(s: jax.Array, c: jax.Array, x: jax.Array):
+    """One compensated-summation step: returns (new_sum, new_compensation).
+
+    Keeps float32 running sums exact to ~1 ulp of the *increments* instead
+    of 1 ulp of the total — the difference between losing every packet past
+    ~10^7 delivered and losing none (ROADMAP numerics note)."""
+    y = x - c
+    t = s + y
+    return t, (t - s) - y
+
+
 class NetState(NamedTuple):
     Q: jax.Array            # [N, 3, NC]
     Ddum: jax.Array         # [N, NC]
@@ -36,10 +54,21 @@ class NetState(NamedTuple):
     cum_comb: jax.Array     # [NC]
     delivered: jax.Array    # [] total processed packets (incl. dummies) at d
     delivered_useful: jax.Array  # []
+    delivered_c: jax.Array       # [] Kahan compensation for `delivered`
+    delivered_useful_c: jax.Array  # [] ... and for `delivered_useful`
 
     def total_queue(self) -> jax.Array:
         """Total backlog tracked for stability (paper §II-D)."""
         return (self.Q.sum() + self.X.sum() + self.Y.sum())
+
+    def credit_delivery(self, dlv: jax.Array,
+                        dlv_useful: jax.Array) -> "NetState":
+        """Compensated update of the cumulative delivery counters."""
+        d, dc = kahan_add(self.delivered, self.delivered_c, dlv)
+        du, duc = kahan_add(self.delivered_useful, self.delivered_useful_c,
+                            dlv_useful)
+        return self._replace(delivered=d, delivered_c=dc,
+                             delivered_useful=du, delivered_useful_c=duc)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,4 +132,6 @@ def init_state(sp: StaticProblem) -> NetState:
         cum_comb=z((NC,), jnp.float32),
         delivered=jnp.zeros((), jnp.float32),
         delivered_useful=jnp.zeros((), jnp.float32),
+        delivered_c=jnp.zeros((), jnp.float32),
+        delivered_useful_c=jnp.zeros((), jnp.float32),
     )

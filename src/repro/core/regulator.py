@@ -26,6 +26,8 @@ def regulator_push(Y: jax.Array, assigned: jax.Array, key: jax.Array,
       assigned: [NC] queries assigned to each node this slot (Ã^(n)(t)).
       key: PRNG key.
       eps_b: Bernoulli success probability (the ``arbitrarily small'' control).
+        May be a Python float *or* a traced scalar — the fleet engine passes
+        it as per-job data so sweeping eps_B reuses one compiled program.
 
     Returns:
       (Y_new, F, dummy): new queues, packets pushed downstream per node,

@@ -6,22 +6,23 @@ Public API:
   batching:   PaddedProblem, PadDims, pad_problem, stack_problems
   engine:     FleetJob, FleetResult, run_fleet, stream_simulate,
               make_stream_runner
-  report:     capacity_report, sweep_jobs
+  report:     capacity_report, sweep_jobs, policy_bound
 """
-from .scenarios import (Scenario, register_scenario, get_scenario,
+from .scenarios import (ModState, Scenario, register_scenario, get_scenario,
                         list_scenarios, ARRIVAL_MODELS, EVENT_MODELS,
                         ARRIVAL_MODEL_ORDER, EVENT_MODEL_ORDER)
 from .batching import PaddedProblem, PadDims, pad_problem, stack_problems
 from .engine import (FleetJob, FleetResult, StreamStats, run_fleet,
                      stream_simulate, make_stream_runner)
-from .report import capacity_report, sweep_jobs
+from .report import capacity_report, policy_bound, sweep_jobs
 
 __all__ = [
-    "Scenario", "register_scenario", "get_scenario", "list_scenarios",
+    "ModState", "Scenario", "register_scenario", "get_scenario",
+    "list_scenarios",
     "ARRIVAL_MODELS", "EVENT_MODELS", "ARRIVAL_MODEL_ORDER",
     "EVENT_MODEL_ORDER",
     "PaddedProblem", "PadDims", "pad_problem", "stack_problems",
     "FleetJob", "FleetResult", "StreamStats", "run_fleet", "stream_simulate",
     "make_stream_runner",
-    "capacity_report", "sweep_jobs",
+    "capacity_report", "policy_bound", "sweep_jobs",
 ]

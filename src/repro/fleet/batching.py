@@ -6,8 +6,8 @@ fleet engine instead pads every instance to fleet-wide maxima and carries the
 problem as *traced* arrays, so a thousand different topologies share one
 compiled program under `vmap`/`shard_map`.
 
-Mask convention (the single source of truth — referenced by README and the
-core policies):
+Mask convention (the single source of truth — narrated in DESIGN.md §3 and
+referenced by README and the core policies):
 
   * Every instance is padded to shared maxima ``(n_nodes, n_edges, n_comp)``.
   * Padded edges are self-loops ``(0, 0)`` with ``edge_cap == 0`` and
@@ -16,7 +16,11 @@ core policies):
     out of wireless matchings and any capacity statistics.
   * Padded computation nodes point at node 0 with ``comp_caps == 0`` and
     ``comp_mask == 0``.  Masked nodes are excluded from the load-balance
-    argmin (score forced to +inf) and combine zero pairs per slot.
+    argmin (score forced to +inf) and combine zero pairs per slot; the
+    regulator consequently sees ``assigned == 0`` there and pushes nothing
+    (``F = 0``), so padded slots accumulate no ``Y``/``H``/``Ddum`` state —
+    padding is the network-side mirror of the paper's dummy-packet
+    regulator (DESIGN.md §2).
   * ``sink`` rows of padded classes are all ``False``; padded *nodes* simply
     host queues that never receive traffic (no active edge touches them).
 

@@ -16,9 +16,15 @@ Jobs = (scenario x policy x rate x seed) tuples.  The engine
 
 Per-job streaming metrics: trailing-window useful rate, running mean/max
 backlog, a head/tail backlog ratio and the derived stability verdict.
-Backlog sums are Kahan-compensated; the fluid simulation itself is float32,
-so for horizons past ~10^7 delivered packets run with JAX_ENABLE_X64=1 if
-exact cumulative counts matter.
+Backlog sums are Kahan-compensated, and `NetState`'s cumulative delivery
+counters are compensated at the source (`NetState.credit_delivery`), so
+horizons past ~10^7 delivered packets keep exact counts in plain float32.
+
+Regulated policies (pi2/pi3 and the explicit `pi2_reg`/`pi3_reg` aliases)
+carry the regulator parameter eps_B as *per-job traced data*, and the
+Markov-modulated event/arrival models (Gilbert–Elliott fading, ON-OFF
+bursty arrivals) carry their chain state through the scan — neither axis
+forks a compiled program.
 """
 from __future__ import annotations
 
@@ -34,10 +40,10 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.graph import ComputeProblem
 from repro.core.policies import PolicyConfig, slot_step
-from repro.core.queues import init_state
+from repro.core.queues import init_state, kahan_add
 from .batching import PadDims, PaddedProblem, pad_problem
 from .scenarios import (ARRIVAL_MODELS, ARRIVAL_MODEL_ORDER, EVENT_MODELS,
-                        EVENT_MODEL_ORDER, arrival_code, event_code,
+                        EVENT_MODEL_ORDER, ModState, arrival_code, event_code,
                         get_scenario)
 
 
@@ -50,7 +56,8 @@ class FleetJob:
     lam: float = 1.0
     seed: int = 0                 # simulation randomness
     topo_seed: int = 0            # topology-generator randomness
-    eps_b: float = 0.01
+    eps_b: float = 0.01           # regulator parameter — traced per-job data,
+                                  # sweeping it does not fork compiled programs
     pairing: str = "fifo"
     threshold: float = 0.0
     fixed_node: int = 0
@@ -68,8 +75,8 @@ class StreamStats(NamedTuple):
     The backlog sums are Kahan-compensated (`c_*` carry the compensation
     term) so float32 running sums stay accurate far beyond the naive
     ~2^24-increment saturation point.  The *cumulative* delivery counters
-    live in `NetState` and remain plain float32 — past ~10^7 delivered
-    packets enable x64 (`JAX_ENABLE_X64=1`) for exact counts.
+    live in `NetState` and are compensated the same way
+    (`NetState.credit_delivery`, DESIGN.md §4).
     """
 
     sum_queue: jax.Array          # [] running sum of total backlog
@@ -87,21 +94,20 @@ class StreamStats(NamedTuple):
         return StreamStats(z, z, z, z, z, z, z, z)
 
 
-def _kahan_add(s: jax.Array, c: jax.Array, x: jax.Array):
-    """One compensated-summation step: returns (new_sum, new_compensation)."""
-    y = x - c
-    t = s + y
-    return t, (t - s) - y
-
-
 def make_stream_runner(cfg: PolicyConfig, T: int, chunk: int = 1024,
                        window: int | None = None):
-    """Build `run(pp, lam, akind, ekind, key, arrivals=None) -> metrics dict`.
+    """Build `run(pp, lam, eps_b, akind, ekind, key, arrivals=None) -> dict`.
+
+    `eps_b` is the regulator parameter as *traced per-job data* (ignored by
+    unregulated policies); a `ModState` (Gilbert–Elliott link chains, the
+    bursty-arrival phase) rides the scan carry next to `NetState`, so
+    Markov-modulated scenarios stay O(1) in memory too.
 
     The horizon is rounded up to a whole number of chunks; `run.T` exposes
     the effective slot count.  With `arrivals=None` the arrival process is
     generated per-slot from (key, t) — passing an explicit [T] trace is the
-    reference path used by equivalence tests.
+    reference path used by equivalence tests (the arrival modulation chain
+    is bypassed; event chains still run).
     """
     chunk = max(1, min(chunk, T))
     n_chunks = -(-T // chunk)
@@ -114,22 +120,24 @@ def make_stream_runner(cfg: PolicyConfig, T: int, chunk: int = 1024,
     arrival_branches = tuple(ARRIVAL_MODELS[k] for k in ARRIVAL_MODEL_ORDER)
     event_branches = tuple(EVENT_MODELS[k] for k in EVENT_MODEL_ORDER)
 
-    def slot(pp, lam, akind, ekind, key, carry, slot_arr):
-        state, stats, t = carry
+    def slot(pp, lam, eps_b, akind, ekind, key, carry, slot_arr):
+        state, stats, mod, t = carry
         kt = jax.random.fold_in(key, t)
         k_arr, k_ev, k_step = jax.random.split(kt, 3)
         if slot_arr is None:
-            arr = jax.lax.switch(akind, arrival_branches, k_arr, lam)
+            arr, mod = jax.lax.switch(akind, arrival_branches, k_arr, lam,
+                                      mod)
         else:
             arr = slot_arr
-        esc, csc = jax.lax.switch(ekind, event_branches, pp, t, k_ev)
+        esc, csc, mod = jax.lax.switch(ekind, event_branches, pp, t, k_ev,
+                                       mod)
         state, m = slot_step(pp.with_capacity_scales(esc, csc), cfg, state,
-                             arr, k_step)
+                             arr, k_step, eps_b=eps_b)
         tq = m["total_queue"]
-        sq, cq = _kahan_add(stats.sum_queue, stats.c_queue, tq)
-        s3, c3 = _kahan_add(stats.sum_queue_q3, stats.c_q3,
-                            tq * ((t >= q3_lo) & (t < q4_lo)))
-        s4, c4 = _kahan_add(stats.sum_queue_q4, stats.c_q4, tq * (t >= q4_lo))
+        sq, cq = kahan_add(stats.sum_queue, stats.c_queue, tq)
+        s3, c3 = kahan_add(stats.sum_queue_q3, stats.c_q3,
+                           tq * ((t >= q3_lo) & (t < q4_lo)))
+        s4, c4 = kahan_add(stats.sum_queue_q4, stats.c_q4, tq * (t >= q4_lo))
         stats = StreamStats(
             sum_queue=sq, c_queue=cq,
             sum_queue_q3=s3, c_q3=c3,
@@ -138,19 +146,20 @@ def make_stream_runner(cfg: PolicyConfig, T: int, chunk: int = 1024,
             useful_at_mark=jnp.where(t == mark - 1, m["delivered_useful"],
                                      stats.useful_at_mark),
         )
-        return (state, stats, t + 1), None
+        return (state, stats, mod, t + 1), None
 
-    def run(pp: PaddedProblem, lam, akind, ekind, key,
+    def run(pp: PaddedProblem, lam, eps_b, akind, ekind, key,
             arrivals: jax.Array | None = None) -> Dict[str, jax.Array]:
-        body = functools.partial(slot, pp, lam, akind, ekind, key)
-        carry0 = (init_state(pp), StreamStats.zero(), jnp.int32(0))
+        body = functools.partial(slot, pp, lam, eps_b, akind, ekind, key)
+        carry0 = (init_state(pp), StreamStats.zero(), ModState.init(pp),
+                  jnp.int32(0))
         if arrivals is None:
             def chunk_body(carry, _):
                 carry, _ = jax.lax.scan(lambda c, x: body(c, None), carry,
                                         xs=None, length=chunk)
                 return carry, None
-            (state, stats, _), _ = jax.lax.scan(chunk_body, carry0, xs=None,
-                                                length=n_chunks)
+            (state, stats, _, _), _ = jax.lax.scan(chunk_body, carry0,
+                                                   xs=None, length=n_chunks)
         else:
             if arrivals.shape[0] != T_eff:
                 raise ValueError(
@@ -159,7 +168,7 @@ def make_stream_runner(cfg: PolicyConfig, T: int, chunk: int = 1024,
             def chunk_body(carry, a):
                 carry, _ = jax.lax.scan(body, carry, a)
                 return carry, None
-            (state, stats, _), _ = jax.lax.scan(
+            (state, stats, _, _), _ = jax.lax.scan(
                 chunk_body, carry0,
                 arrivals.astype(jnp.float32).reshape(n_chunks, chunk))
 
@@ -167,9 +176,11 @@ def make_stream_runner(cfg: PolicyConfig, T: int, chunk: int = 1024,
         mean_q4 = stats.sum_queue_q4 / max(T_eff - q4_lo, 1)
         return {
             "offered": jnp.asarray(lam, jnp.float32),
+            "eps_b": jnp.asarray(eps_b, jnp.float32),
             "useful_rate": (state.delivered_useful - stats.useful_at_mark) / win,
             "delivered": state.delivered,
             "delivered_useful": state.delivered_useful,
+            "delivered_dummy": state.delivered - state.delivered_useful,
             "mean_queue": stats.sum_queue / T_eff,
             "mean_queue_mid": mean_q3,
             "mean_queue_tail": mean_q4,
@@ -202,8 +213,8 @@ def stream_simulate(problem: ComputeProblem, cfg: PolicyConfig, lam: float,
     pp = pad_problem(problem, dims)
     run = make_stream_runner(cfg, T, chunk=chunk, window=window)
     out = jax.jit(functools.partial(run, arrivals=arrivals))(
-        pp, jnp.float32(lam), arrival_code(arrival), event_code(events),
-        jax.random.PRNGKey(seed))
+        pp, jnp.float32(lam), jnp.float32(cfg.eps_b), arrival_code(arrival),
+        event_code(events), jax.random.PRNGKey(seed))
     return out
 
 
@@ -222,9 +233,15 @@ class FleetResult:
 
 
 def _policy_group_key(job: FleetJob):
-    """Axes that change Python-level control flow => separate XLA program."""
-    return (job.policy, job.eps_b, job.pairing, job.threshold, job.fixed_node,
-            get_scenario(job.scenario).wireless)
+    """Axes that change Python-level control flow => separate XLA program.
+
+    Deliberately *semantic*, not the policy name: pi3 and pi3_reg trace to
+    identical programs (both regulated, load-balancing), and eps_b is traced
+    per-job data — so a sweep over regulator parameters, or over plain and
+    ``_reg``-aliased variants, still compiles once per behavior."""
+    cfg = job.policy_config()
+    return (cfg.use_regulator, cfg.load_balance, cfg.thresholded,
+            cfg.pairing, cfg.threshold, cfg.fixed_node, cfg.wireless)
 
 
 def run_fleet(jobs: Sequence[FleetJob], T: int, chunk: int = 1024,
@@ -266,6 +283,7 @@ def run_fleet(jobs: Sequence[FleetJob], T: int, chunk: int = 1024,
             *[padded_of[(jobs[i].scenario, jobs[i].topo_seed)]
               for i in padded_idxs])
         lam = jnp.array([jobs[i].lam for i in padded_idxs], jnp.float32)
+        eps = jnp.array([jobs[i].eps_b for i in padded_idxs], jnp.float32)
         ak = jnp.array([arrival_code(get_scenario(jobs[i].scenario).arrival)
                         for i in padded_idxs], jnp.int32)
         ek = jnp.array([event_code(get_scenario(jobs[i].scenario).events)
@@ -277,10 +295,10 @@ def run_fleet(jobs: Sequence[FleetJob], T: int, chunk: int = 1024,
             jax.vmap(runner),
             mesh=mesh,
             in_specs=(P("fleet"), P("fleet"), P("fleet"), P("fleet"),
-                      P("fleet")),
+                      P("fleet"), P("fleet")),
             out_specs=P("fleet"),
             check_rep=False))   # scan carries have no replication rule yet
-        out = jax.device_get(fn(pp, lam, ak, ek, keys))
+        out = jax.device_get(fn(pp, lam, eps, ak, ek, keys))
         for j, i in enumerate(idxs):
             metrics[i] = {k: float(v[j]) for k, v in out.items()}
 

@@ -6,16 +6,20 @@ a capacity event model (time-varying links / comp-node failure), and the
 interference model (wired vs wireless).  Scenarios are registered by name so
 sweeps are declared as data (`["paper_grid", "random_geometric", ...]`).
 
-Event and arrival models are *online*: pure functions of (slot index, key),
-evaluated inside the scan body, so a 10^6-slot horizon never materializes a
-[T]-shaped trace.  Their registry order is frozen into tuples
-(`ARRIVAL_MODEL_ORDER`, `EVENT_MODEL_ORDER`) so per-job integer codes can
-drive a `lax.switch` — heterogeneous scenarios share one compiled program.
+Event and arrival models are *online*: functions of (slot index, key) plus a
+fixed-shape modulation state `ModState`, evaluated inside the scan body, so
+a 10^6-slot horizon never materializes a [T]-shaped trace.  Memoryless
+models ignore and pass through the state; Markov-modulated models
+(Gilbert–Elliott link fading, ON-OFF bursty arrivals) update it — the
+engine threads one `ModState` through the scan carry (DESIGN.md §4).  The
+registry order is frozen into tuples (`ARRIVAL_MODEL_ORDER`,
+`EVENT_MODEL_ORDER`) so per-job integer codes can drive a `lax.switch` —
+heterogeneous scenarios share one compiled program.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,28 +29,75 @@ from repro.core.graph import ComputeProblem, Graph, grid_graph, paper_grid_probl
 from repro.sim import workload
 
 
+class ModState(NamedTuple):
+    """Markov-modulation state carried through the scan (O(E) memory).
+
+    Every event/arrival model receives and returns the full state so all
+    `lax.switch` branches share one pytree signature; memoryless models pass
+    it through untouched.
+
+      link[e] : 1.0 = Good / 0.0 = Bad   (Gilbert–Elliott channel state)
+      burst   : 1.0 = ON  / 0.0 = OFF    (Markov-modulated arrival phase)
+    """
+
+    link: jax.Array    # [E] float32
+    burst: jax.Array   # [] float32
+
+    @staticmethod
+    def init(sp) -> "ModState":
+        """All links Good, arrivals ON — the chains mix within O(1/p) slots."""
+        E = sp.edges.shape[-2]
+        return ModState(jnp.ones((E,), jnp.float32),
+                        jnp.ones((), jnp.float32))
+
+
 # ---------------------------------------------------------------------------
-# Arrival models: (key, lam) -> scalar arrivals for one slot.  Each wraps the
-# canonical [T]-trace law in repro.sim.workload with T=1 so the two stay in
-# lockstep (same clipping rules, same batch defaults).
+# Arrival models: (key, lam, mod) -> (scalar arrivals, mod').  Memoryless
+# models wrap the canonical [T]-trace law in repro.sim.workload with T=1 so
+# the two stay in lockstep (same clipping rules, same batch defaults).
 # ---------------------------------------------------------------------------
 
-def _arrival_poisson(key: jax.Array, lam: jax.Array) -> jax.Array:
-    return workload.poisson_arrivals(key, lam, 1)[0]
+def _arrival_poisson(key: jax.Array, lam: jax.Array, mod: ModState):
+    return workload.poisson_arrivals(key, lam, 1)[0], mod
 
 
-def _arrival_bernoulli_batch(key: jax.Array, lam: jax.Array) -> jax.Array:
-    return workload.bernoulli_batch_arrivals(key, lam, 1)[0]
+def _arrival_bernoulli_batch(key: jax.Array, lam: jax.Array, mod: ModState):
+    return workload.bernoulli_batch_arrivals(key, lam, 1)[0], mod
 
 
-def _arrival_constant(key: jax.Array, lam: jax.Array) -> jax.Array:
-    return workload.constant_arrivals(lam, 1)[0]
+def _arrival_constant(key: jax.Array, lam: jax.Array, mod: ModState):
+    return workload.constant_arrivals(lam, 1)[0], mod
+
+
+# Markov ON-OFF (interrupted-Poisson) defaults: stationary P(ON) = 0.75,
+# mean ON run 1/P_OFF = 20 slots, mean OFF run 1/P_ON ≈ 6.7 slots.
+MMPP_P_ON_OFF = 0.05     # P(ON -> OFF) per slot
+MMPP_P_OFF_ON = 0.15     # P(OFF -> ON) per slot
+
+
+def _arrival_markov_onoff(key: jax.Array, lam: jax.Array, mod: ModState):
+    """Markov-modulated ON-OFF Poisson arrivals (bursty, *correlated* load).
+
+    A 2-state chain gates the query stream: while ON, arrivals are
+    Poisson(lam / P(ON)); while OFF, none.  The long-run mean is exactly
+    `lam`, so capacity sweeps are comparable with the memoryless models —
+    only the correlation structure changes (mean burst length 1/P_OFF
+    slots instead of 1)."""
+    k_flip, k_arr = jax.random.split(key)
+    pi_on = MMPP_P_OFF_ON / (MMPP_P_ON_OFF + MMPP_P_OFF_ON)
+    u = jax.random.uniform(k_flip)
+    on = jnp.where(mod.burst > 0.5,
+                   (u >= MMPP_P_ON_OFF).astype(jnp.float32),
+                   (u < MMPP_P_OFF_ON).astype(jnp.float32))
+    arr = workload.poisson_arrivals(k_arr, lam / pi_on, 1)[0] * on
+    return arr, mod._replace(burst=on)
 
 
 ARRIVAL_MODELS: Dict[str, Callable] = {
     "poisson": _arrival_poisson,
     "bernoulli_batch": _arrival_bernoulli_batch,
     "constant": _arrival_constant,
+    "markov_onoff": _arrival_markov_onoff,
 }
 ARRIVAL_MODEL_ORDER: Tuple[str, ...] = tuple(ARRIVAL_MODELS)
 
@@ -56,17 +107,22 @@ def arrival_code(name: str) -> int:
 
 
 # ---------------------------------------------------------------------------
-# Event models: (problem, t, key) -> (edge_scale [E], comp_scale [NC]).
-# `problem` is any StaticProblem/PaddedProblem duck type; scales multiply the
-# static capacities for this slot only (memoryless, O(1) state).
+# Event models: (problem, t, key, mod) -> (edge_scale [E], comp_scale [NC],
+# mod').  `problem` is any StaticProblem/PaddedProblem duck type; scales
+# multiply the static capacities for this slot only.
 # ---------------------------------------------------------------------------
 
-def _ev_static(sp, t: jax.Array, key: jax.Array):
+def _ones(sp):
     E = sp.edges.shape[-2]
     return jnp.ones((E,), jnp.float32), jnp.ones((sp.n_comp,), jnp.float32)
 
 
-def _ev_fading(sp, t: jax.Array, key: jax.Array,
+def _ev_static(sp, t: jax.Array, key: jax.Array, mod: ModState):
+    es, cs = _ones(sp)
+    return es, cs, mod
+
+
+def _ev_fading(sp, t: jax.Array, key: jax.Array, mod: ModState,
                period: float = 200.0, depth: float = 0.35):
     """Deterministic per-link slow fading: capacity oscillates in
     [1 - 2*depth, 1] with an edge-dependent phase."""
@@ -74,22 +130,47 @@ def _ev_fading(sp, t: jax.Array, key: jax.Array,
     phase = jnp.arange(E, dtype=jnp.float32) / jnp.float32(max(E, 1))
     s = 1.0 - depth + depth * jnp.cos(
         2.0 * jnp.pi * (t.astype(jnp.float32) / period + phase))
-    return s.astype(jnp.float32), jnp.ones((sp.n_comp,), jnp.float32)
+    return s.astype(jnp.float32), _ones(sp)[1], mod
 
 
-def _ev_link_flaps(sp, t: jax.Array, key: jax.Array, p_up: float = 0.9):
+def _ev_link_flaps(sp, t: jax.Array, key: jax.Array, mod: ModState,
+                   p_up: float = 0.9):
     """i.i.d. per-slot link outages: each edge is up w.p. `p_up`."""
     E = sp.edges.shape[-2]
     up = jax.random.bernoulli(key, p_up, (E,)).astype(jnp.float32)
-    return up, jnp.ones((sp.n_comp,), jnp.float32)
+    return up, _ones(sp)[1], mod
 
 
-def _ev_comp_failures(sp, t: jax.Array, key: jax.Array, p_up: float = 0.9):
+def _ev_comp_failures(sp, t: jax.Array, key: jax.Array, mod: ModState,
+                      p_up: float = 0.9):
     """i.i.d. per-slot comp-node failure/recovery: node computes w.p. `p_up`.
     Failed nodes keep their queues (state is untouched) but combine nothing."""
-    E = sp.edges.shape[-2]
     up = jax.random.bernoulli(key, p_up, (sp.n_comp,)).astype(jnp.float32)
-    return jnp.ones((E,), jnp.float32), up
+    return _ones(sp)[0], up, mod
+
+
+# Gilbert–Elliott defaults: stationary P(Bad) = P_GB/(P_GB+P_BG) ≈ 0.091,
+# mean Bad run 1/P_BG = 5 slots, long-run mean capacity scale ≈ 0.93.
+GE_P_GB = 0.02           # P(Good -> Bad) per slot, per link
+GE_P_BG = 0.20           # P(Bad -> Good) per slot, per link
+GE_BAD_SCALE = 0.25      # capacity multiplier while Bad
+
+
+def _ev_gilbert_elliott(sp, t: jax.Array, key: jax.Array, mod: ModState):
+    """2-state Markov (Gilbert–Elliott) per-link fading.
+
+    Each link runs an independent Good/Bad chain; Bad links keep only
+    `GE_BAD_SCALE` of their capacity.  Unlike `link_flaps` the outages are
+    *correlated in time* (mean Bad run 1/P_BG slots), the regime where
+    backpressure's implicit re-routing matters — the chain state lives in
+    `mod.link` and is updated here, inside the scan."""
+    E = sp.edges.shape[-2]
+    u = jax.random.uniform(key, (E,))
+    good = jnp.where(mod.link > 0.5,
+                     (u >= GE_P_GB).astype(jnp.float32),
+                     (u < GE_P_BG).astype(jnp.float32))
+    scale = GE_BAD_SCALE + (1.0 - GE_BAD_SCALE) * good
+    return scale, _ones(sp)[1], mod._replace(link=good)
 
 
 EVENT_MODELS: Dict[str, Callable] = {
@@ -97,6 +178,7 @@ EVENT_MODELS: Dict[str, Callable] = {
     "fading": _ev_fading,
     "link_flaps": _ev_link_flaps,
     "comp_failures": _ev_comp_failures,
+    "gilbert_elliott": _ev_gilbert_elliott,
 }
 EVENT_MODEL_ORDER: Tuple[str, ...] = tuple(EVENT_MODELS)
 
@@ -325,3 +407,12 @@ register_scenario(Scenario(
 register_scenario(Scenario(
     "failing_grid", lambda seed: paper_grid_problem(), events="comp_failures",
     description="Paper grid with comp-node failure/recovery."))
+register_scenario(Scenario(
+    "ge_grid", lambda seed: paper_grid_problem(), events="gilbert_elliott",
+    description="Paper grid under Gilbert–Elliott (Markov) link fading."))
+register_scenario(Scenario(
+    "ge_geometric", random_geometric, events="gilbert_elliott",
+    description="Random geometric graph under Gilbert–Elliott link fading."))
+register_scenario(Scenario(
+    "bursty_grid", lambda seed: paper_grid_problem(), arrival="markov_onoff",
+    description="Paper grid with Markov ON-OFF (correlated bursty) arrivals."))

@@ -78,7 +78,15 @@ def make_rules(mesh: Mesh, *, fsdp: bool = True, expert_parallel: bool = True,
 
 def spec_for(shape: Sequence[int], axes: Sequence[Optional[str]],
              rules: Rules) -> P:
-    """PartitionSpec with divisibility-aware fallback to replication."""
+    """PartitionSpec with divisibility-aware fallback to replication.
+
+    Tuple-vs-scalar normalization: a rules-table entry that is a *tuple* of
+    mesh axes (a multi-axis group like the FSDP ``("pod", "data")``) stays a
+    tuple in the spec even when only one axis survives filtering —
+    `PartitionSpec` equality distinguishes ``P("data")`` from
+    ``P(("data",))``, so collapsing would make specs built from the same
+    table compare unequal depending on mesh size.  Scalar (str) entries stay
+    scalar."""
     entries = []
     used = set()
     for dim, ax in zip(shape, axes):
@@ -86,12 +94,13 @@ def spec_for(shape: Sequence[int], axes: Sequence[Optional[str]],
         if mesh_axes is None:
             entries.append(None)
             continue
-        if isinstance(mesh_axes, str):
+        grouped = not isinstance(mesh_axes, str)
+        if not grouped:
             mesh_axes = (mesh_axes,)
         mesh_axes = tuple(a for a in mesh_axes if a not in used)
         size = int(np.prod([rules.mesh.shape[a] for a in mesh_axes])) if mesh_axes else 1
         if mesh_axes and dim % size == 0 and dim > 0:
-            entries.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+            entries.append(mesh_axes if grouped else mesh_axes[0])
             used.update(mesh_axes)
         else:
             entries.append(None)

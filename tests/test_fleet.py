@@ -15,11 +15,14 @@ from repro.core.queues import StaticProblem, init_state
 from repro.sim import SimResult, simulate
 from repro.sim.simulator import make_trace_runner
 from repro.sim.workload import poisson_arrivals
-from repro.fleet import (FleetJob, PadDims, get_scenario, list_scenarios,
-                         make_stream_runner, pad_problem, run_fleet,
-                         stack_problems, stream_simulate)
-from repro.fleet.scenarios import (ARRIVAL_MODEL_ORDER, EVENT_MODELS,
-                                   EVENT_MODEL_ORDER, SCENARIOS)
+from repro.fleet import (FleetJob, ModState, PadDims, get_scenario,
+                         list_scenarios, make_stream_runner, pad_problem,
+                         policy_bound, run_fleet, stack_problems,
+                         stream_simulate, sweep_jobs)
+from repro.fleet.scenarios import (ARRIVAL_MODELS, ARRIVAL_MODEL_ORDER,
+                                   EVENT_MODELS, EVENT_MODEL_ORDER,
+                                   GE_BAD_SCALE, GE_P_BG, GE_P_GB,
+                                   MMPP_P_OFF_ON, MMPP_P_ON_OFF, SCENARIOS)
 
 TRI = ComputeProblem(triangle_graph(4.0), s1=0, s2=1, dest=2,
                      comp_nodes=(2,), comp_caps=(2.0,))
@@ -161,6 +164,27 @@ class TestPaddedBatching:
             picks.add(int(m["n_star"]))
         assert picks <= {0, 2}
 
+    def test_regulator_inert_on_padded_comp_slots(self):
+        """Padded (masked-out) computation slots must never accumulate
+        regulator state or push dummies: the regulator sees assigned == 0
+        there, so Y and Ddum stay exactly zero (the regulator-as-padding
+        correspondence, DESIGN.md §2/§3)."""
+        p = paper_grid_problem()
+        nc = p.n_comp
+        big = pad_problem(p, PadDims(20, 30, nc + 3))
+        out = stream_simulate(p, PolicyConfig(name="pi3_reg", eps_b=0.2),
+                              lam=4.0, T=300, chunk=100, seed=5,
+                              dims=PadDims(20, 30, nc + 3))
+        assert float(out["delivered_useful"]) > 0.0
+        # reach the final NetState through the reference trace path
+        arr = poisson_arrivals(jax.random.key(0), 4.0, 300)
+        res = make_trace_runner(big, PolicyConfig(name="pi3_reg", eps_b=0.2))(
+            arr, jax.random.key(1))
+        final = res.final_state
+        assert np.all(np.asarray(final.Y[nc:]) == 0.0)
+        assert np.all(np.asarray(final.H[nc:]) == 0.0)
+        assert np.all(np.asarray(final.Ddum[:, nc:]) == 0.0)
+
 
 # ---------------------------------------------------------------------------
 # Streaming engine (chunked scan + online accumulators)
@@ -193,8 +217,8 @@ class TestStreaming:
         pp = pad_problem(TRI, PadDims.of([TRI]))
         jaxpr = jax.make_jaxpr(
             functools.partial(run, arrivals=None))(
-                pp, jnp.float32(1.0), jnp.int32(0), jnp.int32(0),
-                jax.random.PRNGKey(0))
+                pp, jnp.float32(1.0), jnp.float32(0.01), jnp.int32(0),
+                jnp.int32(0), jax.random.PRNGKey(0))
 
         def max_dim(jxp):
             dims = [0]
@@ -269,15 +293,80 @@ class TestScenarios:
     def test_event_models_shapes_and_ranges(self):
         pp = pad_problem(TRI, PadDims.of([TRI]))
         key = jax.random.key(0)
+        mod0 = ModState.init(pp)
         for name in EVENT_MODEL_ORDER:
-            es, cs = EVENT_MODELS[name](pp, jnp.int32(17), key)
+            es, cs, mod = EVENT_MODELS[name](pp, jnp.int32(17), key, mod0)
             assert es.shape == (pp.n_edges,)
             assert cs.shape == (pp.n_comp,)
+            assert mod.link.shape == mod0.link.shape
             assert float(es.min()) >= 0.0 and float(es.max()) <= 1.0 + 1e-6
             assert float(cs.min()) >= 0.0 and float(cs.max()) <= 1.0 + 1e-6
-        # static model is the identity
-        es, cs = EVENT_MODELS["static"](pp, jnp.int32(0), key)
+        # static model is the identity and passes the state through untouched
+        es, cs, mod = EVENT_MODELS["static"](pp, jnp.int32(0), key, mod0)
         assert float(es.min()) == 1.0 and float(cs.min()) == 1.0
+        assert mod is mod0
+
+    def test_gilbert_elliott_stationary_bad_fraction(self):
+        """The per-link Good/Bad chain must mix to P(Bad) = P_GB/(P_GB+P_BG)
+        and emit only the two scales {bad_scale, 1}."""
+        pp = pad_problem(TRI, PadDims.of([TRI]))
+        ge = EVENT_MODELS["gilbert_elliott"]
+
+        def body(carry, k):
+            es, _, mod = ge(pp, jnp.int32(0), k, carry)
+            return mod, es
+
+        T = 4000
+        keys = jax.random.split(jax.random.key(7), T)
+        _, scales = jax.lax.scan(body, ModState.init(pp), keys)
+        vals = np.unique(np.asarray(scales).round(6))
+        assert set(vals) <= {np.float32(GE_BAD_SCALE), np.float32(1.0)}
+        # drop the burn-in, compare against the stationary distribution
+        bad = np.asarray(scales[T // 4:] < 0.5).mean()
+        pi_bad = GE_P_GB / (GE_P_GB + GE_P_BG)
+        assert bad == pytest.approx(pi_bad, abs=0.03)
+
+    def test_gilbert_elliott_outages_are_correlated(self):
+        """Consecutive-slot Bad states must co-occur far more often than the
+        i.i.d. square of the marginal (the point of the Markov model)."""
+        pp = pad_problem(TRI, PadDims.of([TRI]))
+        ge = EVENT_MODELS["gilbert_elliott"]
+
+        def body(carry, k):
+            es, _, mod = ge(pp, jnp.int32(0), k, carry)
+            return mod, es < 0.5
+
+        T = 4000
+        keys = jax.random.split(jax.random.key(3), T)
+        _, bad = jax.lax.scan(body, ModState.init(pp), keys)
+        bad = np.asarray(bad[T // 4:])
+        p_bad = bad.mean()
+        p_joint = (bad[1:] & bad[:-1]).mean()
+        # Markov chain: P(bad, bad) = pi_bad * (1 - P_BG) >> pi_bad^2
+        assert p_joint > 3.0 * p_bad ** 2
+
+    def test_markov_onoff_arrivals_preserve_mean_and_burst(self):
+        """Long-run mean must equal lam; ON/OFF runs must be multi-slot."""
+        lam = 2.0
+        arr_fn = ARRIVAL_MODELS["markov_onoff"]
+        pp = pad_problem(TRI, PadDims.of([TRI]))
+
+        def body(carry, k):
+            a, mod = arr_fn(k, jnp.float32(lam), carry)
+            return mod, (a, mod.burst)
+
+        T = 20000
+        keys = jax.random.split(jax.random.key(11), T)
+        _, (arr, on) = jax.lax.scan(body, ModState.init(pp), keys)
+        arr, on = np.asarray(arr), np.asarray(on)
+        assert arr.mean() == pytest.approx(lam, rel=0.05)
+        pi_on = MMPP_P_OFF_ON / (MMPP_P_ON_OFF + MMPP_P_OFF_ON)
+        assert on.mean() == pytest.approx(pi_on, abs=0.05)
+        assert np.all(arr[on < 0.5] == 0.0)          # OFF slots are silent
+        # mean ON-run length 1/P_OFF: count runs via transitions
+        flips = np.abs(np.diff(on)).sum()
+        mean_run = len(on) / max(flips, 1)
+        assert mean_run > 3.0                        # i.i.d. would give ~1-2
 
 
 # ---------------------------------------------------------------------------
@@ -317,3 +406,82 @@ class TestFleetEngine:
                 FleetJob(scenario="wireless_grid", policy="pi3", lam=1.0)]
         res = run_fleet(jobs, T=128, chunk=64)
         assert res.n_programs == 2
+
+    def test_eps_b_sweep_and_reg_alias_share_one_program(self):
+        """eps_B is traced per-job data and pi3/pi3_reg are semantically one
+        policy: a sweep over both axes must compile exactly one program."""
+        jobs = [FleetJob(scenario="paper_grid", policy=pol, lam=2.0,
+                         eps_b=eps, seed=0)
+                for pol in ("pi3", "pi3_reg")
+                for eps in (0.01, 0.05, 0.2)]
+        res = run_fleet(jobs, T=256, chunk=64)
+        assert res.n_programs == 1
+        np.testing.assert_allclose(res.column("eps_b"),
+                                   [0.01, 0.05, 0.2] * 2, rtol=1e-6)
+        # the traced eps_B must actually reach the regulator: with identical
+        # seeds the Bernoulli draws are monotone-coupled in eps (uniform < p),
+        # so eps 0.2 must deliver strictly more dummies than eps 0.01
+        dummy = res.column("delivered_dummy")
+        assert np.all(np.isfinite(dummy)) and np.all(dummy >= -1e-4)
+        for base in (0, 3):                       # pi3 block, pi3_reg block
+            assert dummy[base + 2] > dummy[base] + 1.0, dummy
+
+    def test_markov_scenarios_run_in_fleet(self):
+        """Gilbert–Elliott fading and bursty arrivals ride the same compiled
+        program as static scenarios (chain state lives in the scan carry)."""
+        jobs = [FleetJob(scenario=s, policy="pi3_reg", lam=2.0, eps_b=0.05)
+                for s in ("paper_grid", "ge_grid", "bursty_grid")]
+        res = run_fleet(jobs, T=256, chunk=64)
+        assert res.n_programs == 1
+        useful = res.column("useful_rate")
+        assert np.all(np.isfinite(useful)) and np.all(useful >= 0.0)
+
+
+# ---------------------------------------------------------------------------
+# rho0-adjusted bounds (report layer)
+# ---------------------------------------------------------------------------
+
+class TestRegulatedBounds:
+    def test_policy_bound_adjusts_only_regulated(self):
+        assert policy_bound(8.0, "pi3bar", 0.05) == pytest.approx(8.0)
+        assert policy_bound(8.0, "pi1", 0.05) == pytest.approx(8.0)
+        for pol in ("pi2", "pi2_reg", "pi3", "pi3_reg"):
+            assert policy_bound(8.0, pol, 0.05) == pytest.approx(8.0 / 1.05)
+
+    def test_sweep_jobs_scale_offered_by_policy_bound(self):
+        jobs = sweep_jobs({"paper_grid": ("pi3bar", "pi3_reg")},
+                          rate_fracs=(0.5,), seeds=(0,), eps_b=0.05,
+                          lam_star_of={"paper_grid": 8.0})
+        lam = {j.policy: j.lam for j in jobs}
+        assert lam["pi3bar"] == pytest.approx(4.0)
+        assert lam["pi3_reg"] == pytest.approx(4.0 / 1.05)
+        assert all(j.eps_b == 0.05 for j in jobs)
+
+
+# ---------------------------------------------------------------------------
+# Compensated delivery counters (ROADMAP numerics note)
+# ---------------------------------------------------------------------------
+
+class TestCompensatedCounters:
+    def test_increments_survive_past_f32_saturation(self):
+        """Plain float32 drops every sub-ulp increment once the total passes
+        2^24; the compensated counters must keep them all."""
+        sp = StaticProblem.build(TRI)
+        st = init_state(sp)
+        big = jnp.float32(2.0 ** 24)
+        st = st._replace(delivered=big, delivered_useful=big)
+
+        def body(s, _):
+            return s.credit_delivery(jnp.float32(0.25), jnp.float32(0.25)), None
+
+        st, _ = jax.lax.scan(body, st, xs=None, length=1000)
+        # kahan_add keeps sum - compensation == exact total
+        gained = (float(st.delivered) - float(st.delivered_c)) - 2.0 ** 24
+        assert gained == pytest.approx(250.0, rel=1e-6)
+        # the headline field alone is within one f32 ulp (2.0) of the truth
+        assert float(st.delivered) - 2.0 ** 24 == pytest.approx(250.0, abs=2.0)
+        # the naive sum loses everything — the failure mode being guarded
+        naive = big
+        for _ in range(10):
+            naive = naive + jnp.float32(0.25)
+        assert float(naive) == 2.0 ** 24
