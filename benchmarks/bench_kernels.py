@@ -7,7 +7,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels.flash_attention.ops import flash_attention_op, attention_ref
 from repro.kernels.bp_route.ops import bp_route_op, bp_route_ref

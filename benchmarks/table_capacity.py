@@ -6,8 +6,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
 from repro.core import (PolicyConfig, capacity_upper_bound,
                         paper_grid_problem, single_node_capacity)
 from repro.sim import simulate

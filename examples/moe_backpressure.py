@@ -13,7 +13,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import RunConfig, ShapeConfig, get_config, reduced
-from repro.core.router import load_violation
 from repro.data import DataConfig, TokenStream
 from repro.runtime.step import init_train_state, make_train_step
 

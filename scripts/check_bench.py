@@ -1,0 +1,124 @@
+#!/usr/bin/env python
+"""Bench regression gate (CI: scripts/test.sh, after bench_fleet --preset smoke).
+
+Compares the freshly-emitted fleet bench table against the committed
+baseline (`BENCH_baseline.json`) and fails on:
+
+  1. >25% per-sim wall-time regression (`us_per_sim`), and
+  2. any efficiency-gate breach — the paper-grid rows must keep
+     pi3 >= 0.8 and every regulated (`*_reg`) row >= 0.9 of its *exact*
+     regulated LP bound (DESIGN.md §6), and
+  3. a broken bound invariant (`bound_approx <= bound_exact <=
+     bound_approx * rho0`) anywhere in the table.
+
+Peak chunk-step memory is reported as a delta but not gated (XLA temp
+sizing is backend/version dependent).
+
+Timing on shared CI hardware is noisy; the threshold can be relaxed via
+CHECK_BENCH_MAX_REGRESSION (default 1.25) or timing can be skipped
+entirely with CHECK_BENCH_SKIP_TIMING=1 (the efficiency/bound gates always
+run).
+
+Usage:
+  python scripts/check_bench.py BENCH_fleet.json BENCH_baseline.json
+"""
+from __future__ import annotations
+
+import importlib.util
+import json
+import os
+import pathlib
+import sys
+
+
+def _load_gates() -> dict:
+    """Import EFFICIENCY_GATES from benchmarks/bench_fleet.py (the single
+    source of truth — its module top level imports nothing heavy)."""
+    path = pathlib.Path(__file__).resolve().parent.parent / "benchmarks" \
+        / "bench_fleet.py"
+    spec = importlib.util.spec_from_file_location("bench_fleet", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod.EFFICIENCY_GATES
+
+
+#: (scenario, policy) -> minimum efficiency vs the exact regulated bound.
+EFFICIENCY_GATES = _load_gates()
+
+
+def iter_rows(table: dict):
+    for scen, entry in table.get("scenarios", {}).items():
+        for pol, row in entry.get("policies", {}).items():
+            yield scen, pol, row
+
+
+def check(current: dict, baseline: dict) -> list[str]:
+    errors = []
+
+    # --- 1. wall-time regression
+    if os.environ.get("CHECK_BENCH_SKIP_TIMING", "0") != "1":
+        max_reg = float(os.environ.get("CHECK_BENCH_MAX_REGRESSION", "1.25"))
+        cur_us, base_us = current.get("us_per_sim"), baseline.get("us_per_sim")
+        if cur_us is None:
+            errors.append("current table has no us_per_sim field")
+        elif base_us:
+            ratio = cur_us / base_us
+            print(f"check_bench: us_per_sim {cur_us:.0f} vs baseline "
+                  f"{base_us:.0f} (x{ratio:.2f}, limit x{max_reg:.2f})")
+            if ratio > max_reg:
+                errors.append(
+                    f"us_per_sim regression: {cur_us:.0f} > "
+                    f"{base_us:.0f} * {max_reg:.2f}")
+
+    # --- 2. efficiency gates
+    rows = {(s, p): r for s, p, r in iter_rows(current)}
+    for (scen, pol), floor in EFFICIENCY_GATES.items():
+        row = rows.get((scen, pol))
+        if row is None:
+            continue                      # preset does not sweep this row
+        eff = row.get("efficiency", 0.0)
+        print(f"check_bench: {scen}/{pol} efficiency {eff:.3f} "
+              f"(gate >= {floor})")
+        if eff < floor:
+            errors.append(f"{scen}/{pol}: efficiency {eff:.3f} < {floor} "
+                          f"vs exact bound {row.get('bound_exact')}")
+
+    # --- 3. bound invariants (exact regulated LP vs rho0 approximation)
+    for scen, pol, row in iter_rows(current):
+        be, ba = row.get("bound_exact"), row.get("bound_approx")
+        rho0 = row.get("rho0", 1.0)
+        if be is None or ba is None:
+            errors.append(f"{scen}/{pol}: missing bound_exact/bound_approx")
+            continue
+        if not (ba <= be * (1 + 1e-9) and be <= ba * rho0 * (1 + 1e-9)):
+            errors.append(
+                f"{scen}/{pol}: bound invariant broken: approx={ba} "
+                f"exact={be} rho0={rho0}")
+
+    # --- memory delta: informational only
+    cur_mem = (current.get("memory") or {}).get("peak_bytes")
+    base_mem = (baseline.get("memory") or {}).get("peak_bytes")
+    if cur_mem and base_mem:
+        print(f"check_bench: chunk-step peak {cur_mem:.0f} B vs baseline "
+              f"{base_mem:.0f} B ({cur_mem / base_mem - 1:+.1%} - not gated)")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    if len(argv) != 3:
+        print(__doc__, file=sys.stderr)
+        return 2
+    with open(argv[1]) as f:
+        current = json.load(f)
+    with open(argv[2]) as f:
+        baseline = json.load(f)
+    errors = check(current, baseline)
+    for e in errors:
+        print(f"check_bench: ERROR: {e}", file=sys.stderr)
+    if not errors:
+        print("check_bench: all gates pass")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

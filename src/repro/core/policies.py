@@ -20,7 +20,6 @@ from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .queues import NetState, StaticProblem
 from .regulator import regulator_push

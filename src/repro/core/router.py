@@ -16,11 +16,22 @@ Selection per token:
 Combine weights use the *unbiased* gate probabilities of the selected
 experts (the bias steers placement, not the function value) — the same
 separation the paper makes between routing decisions and packet contents.
+
+The H update runs over micro-batches of the step's tokens (a short
+`lax.scan`), not once per full batch.  Updating H only between full
+batches makes the controller bang-bang: one idle step changes the bias by
+beta * capacity / capacity = beta — the entire gate-probability scale —
+so a hot expert flips between "takes every token" and "blocked for
+several steps", and the time-averaged load stays visibly imbalanced.
+With `micro_batches` sub-updates the bias moves in steps of
+beta / micro_batches and a hot expert settles at a *partial* share within
+a single routing call (the paper's per-slot H_n dynamics, where arrivals
+per slot are comparable to capacity, not T times it).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -44,6 +55,9 @@ class RouterConfig:
     beta: float = 1.0           # backpressure bias strength
     aux_coef: float = 0.01      # Switch-style aux loss coefficient (mode=aux)
     capacity_factor: float = 1.25
+    micro_batches: int = 8      # H sub-updates per routing call (see module
+                                # docstring); the largest divisor of T that
+                                # is <= this is used, so any T works
 
 
 class RouterOut(NamedTuple):
@@ -61,20 +75,27 @@ def route(cfg: RouterConfig, state: RouterState, logits: jax.Array) -> RouterOut
     probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
 
     capacity = jnp.asarray(T * cfg.k / E, jnp.float32)   # C_e per step
-    if cfg.mode == "backpressure":
-        bias = cfg.beta * state.H / jnp.maximum(capacity, 1.0)
-        sel_score = probs - jax.lax.stop_gradient(bias)[None, :]
-    else:
-        sel_score = probs
+    M = max(d for d in range(1, min(cfg.micro_batches, T) + 1) if T % d == 0)
+    cap_micro = capacity / M
 
-    _, expert_idx = jax.lax.top_k(sel_score, cfg.k)      # [T, k]
-    gathered = jnp.take_along_axis(probs, expert_idx, axis=1)
-    combine_w = gathered / jnp.maximum(gathered.sum(axis=1, keepdims=True), 1e-9)
+    def micro(H, p):                                     # p: [T/M, E]
+        if cfg.mode == "backpressure":
+            bias = cfg.beta * H / jnp.maximum(capacity, 1.0)
+            sel_score = p - jax.lax.stop_gradient(bias)[None, :]
+        else:
+            sel_score = p
+        _, idx = jax.lax.top_k(sel_score, cfg.k)         # [T/M, k]
+        gathered = jnp.take_along_axis(p, idx, axis=1)
+        w = gathered / jnp.maximum(gathered.sum(axis=1, keepdims=True), 1e-9)
+        asg = jax.nn.one_hot(idx, E, dtype=jnp.float32).sum(axis=(0, 1))
+        H = jnp.maximum(H + jax.lax.stop_gradient(asg) - cap_micro, 0.0)
+        return H, (idx, w, asg)
 
-    one_hot = jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)   # [T, k, E]
-    assigned = one_hot.sum(axis=(0, 1))                  # [E] tokens per expert
-
-    H_new = jnp.maximum(state.H + jax.lax.stop_gradient(assigned) - capacity, 0.0)
+    H_new, (idx, w, asg) = jax.lax.scan(micro, state.H,
+                                        probs.reshape(M, T // M, E))
+    expert_idx = idx.reshape(T, cfg.k)
+    combine_w = w.reshape(T, cfg.k)
+    assigned = asg.sum(axis=0)                           # [E] tokens per expert
     new_state = RouterState(H=H_new, steps=state.steps + 1)
 
     if cfg.mode == "aux":

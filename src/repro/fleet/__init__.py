@@ -5,16 +5,18 @@ Public API:
               ARRIVAL_MODELS, EVENT_MODELS
   batching:   PaddedProblem, PadDims, pad_problem, stack_problems
   engine:     FleetJob, FleetResult, run_fleet, stream_simulate,
-              make_stream_runner
-  report:     capacity_report, sweep_jobs, policy_bound
+              make_stream_runner, make_group_launch
+  report:     capacity_report, sweep_jobs, policy_bound, policy_bound_exact,
+              exact_lam_star
 """
 from .scenarios import (ModState, Scenario, register_scenario, get_scenario,
                         list_scenarios, ARRIVAL_MODELS, EVENT_MODELS,
                         ARRIVAL_MODEL_ORDER, EVENT_MODEL_ORDER)
 from .batching import PaddedProblem, PadDims, pad_problem, stack_problems
-from .engine import (FleetJob, FleetResult, StreamStats, run_fleet,
-                     stream_simulate, make_stream_runner)
-from .report import capacity_report, policy_bound, sweep_jobs
+from .engine import (FleetJob, FleetResult, StreamStats, make_group_launch,
+                     run_fleet, stream_simulate, make_stream_runner)
+from .report import (capacity_report, exact_lam_star, policy_bound,
+                     policy_bound_exact, sweep_jobs)
 
 __all__ = [
     "ModState", "Scenario", "register_scenario", "get_scenario",
@@ -22,7 +24,8 @@ __all__ = [
     "ARRIVAL_MODELS", "EVENT_MODELS", "ARRIVAL_MODEL_ORDER",
     "EVENT_MODEL_ORDER",
     "PaddedProblem", "PadDims", "pad_problem", "stack_problems",
-    "FleetJob", "FleetResult", "StreamStats", "run_fleet", "stream_simulate",
-    "make_stream_runner",
-    "capacity_report", "policy_bound", "sweep_jobs",
+    "FleetJob", "FleetResult", "StreamStats", "make_group_launch",
+    "run_fleet", "stream_simulate", "make_stream_runner",
+    "capacity_report", "exact_lam_star", "policy_bound",
+    "policy_bound_exact", "sweep_jobs",
 ]

@@ -78,9 +78,19 @@ class PaddedProblem:
 
     def with_capacity_scales(self, edge_scale: jax.Array,
                              comp_scale: jax.Array) -> "PaddedProblem":
-        """Per-slot time-varying capacities (fleet event models)."""
-        return self.replace(edge_cap=self.edge_cap * edge_scale,
-                            comp_caps=self.comp_caps * comp_scale)
+        """Per-slot time-varying capacities (fleet event models).
+
+        A comp node whose scale is zero this slot — an event-model outage,
+        e.g. the Markov `ge_comp` chain — is also gated out of `comp_mask`,
+        so it is excluded from the load-balance argmin exactly like a
+        padded slot: a Down node keeps its queues but neither combines
+        pairs nor attracts new query assignments (DESIGN.md §3).  Edge
+        masks need no gating: `bp_route_slot` already weights matching and
+        allocation by the scaled capacity."""
+        return self.replace(
+            edge_cap=self.edge_cap * edge_scale,
+            comp_caps=self.comp_caps * comp_scale,
+            comp_mask=self.comp_mask * (comp_scale > 0.0).astype(jnp.float32))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -9,10 +9,13 @@ Jobs = (scenario x policy x rate x seed) tuples.  The engine
      compiled program.  Everything else (topology, arrival model, event
      model, rate, seed) is traced data: heterogeneous scenarios ride one
      program via padded constants and `lax.switch` over model codes.
-  3. runs each group as ONE `jax.jit(shard_map(vmap(...)))` launch over the
-     (host-platform) device mesh, with a chunked `lax.scan` over time and
-     *online* metric accumulators — no [T]-shaped trace is ever allocated,
-     so horizons of 10^6+ slots are memory-O(1).
+  3. runs each group as a short Python loop of `jax.jit(shard_map(vmap(
+     chunk_step)))` launches over the (host-platform) device mesh — each
+     launch advances one chunk of the time scan with the carry *donated*
+     back into the next launch (`make_group_launch`), and per-slot *online*
+     metric accumulators ride the carry — no [T]-shaped trace is ever
+     allocated and the fleet state exists exactly once, so horizons of
+     10^6+ slots are memory-O(1).
 
 Per-job streaming metrics: trailing-window useful rate, running mean/max
 backlog, a head/tail backlog ratio and the derived stability verdict.
@@ -99,8 +102,8 @@ def make_stream_runner(cfg: PolicyConfig, T: int, chunk: int = 1024,
     """Build `run(pp, lam, eps_b, akind, ekind, key, arrivals=None) -> dict`.
 
     `eps_b` is the regulator parameter as *traced per-job data* (ignored by
-    unregulated policies); a `ModState` (Gilbert–Elliott link chains, the
-    bursty-arrival phase) rides the scan carry next to `NetState`, so
+    unregulated policies); a `ModState` (Gilbert–Elliott link/comp chains,
+    the bursty-arrival phase) rides the scan carry next to `NetState`, so
     Markov-modulated scenarios stay O(1) in memory too.
 
     The horizon is rounded up to a whole number of chunks; `run.T` exposes
@@ -108,6 +111,15 @@ def make_stream_runner(cfg: PolicyConfig, T: int, chunk: int = 1024,
     generated per-slot from (key, t) — passing an explicit [T] trace is the
     reference path used by equivalence tests (the arrival modulation chain
     is bypassed; event chains still run).
+
+    Besides `run` (a single closed program, used by `stream_simulate` and
+    the explicit-arrivals path), the returned object exposes the pieces the
+    fleet engine drives chunk-by-chunk from Python with a *donated* carry
+    (`run_fleet`): `run.init_carry(pp)`, `run.chunk_step(pp, lam, eps_b,
+    akind, ekind, key, carry)` (advances `chunk` slots; the slot index in
+    the carry keeps the RNG stream and window marks global), and
+    `run.finalize(lam, eps_b, carry)` (the metrics dict).  `run.n_chunks`
+    is the number of chunk_step applications that make up one run.
     """
     chunk = max(1, min(chunk, T))
     n_chunks = -(-T // chunk)
@@ -148,30 +160,22 @@ def make_stream_runner(cfg: PolicyConfig, T: int, chunk: int = 1024,
         )
         return (state, stats, mod, t + 1), None
 
-    def run(pp: PaddedProblem, lam, eps_b, akind, ekind, key,
-            arrivals: jax.Array | None = None) -> Dict[str, jax.Array]:
-        body = functools.partial(slot, pp, lam, eps_b, akind, ekind, key)
-        carry0 = (init_state(pp), StreamStats.zero(), ModState.init(pp),
-                  jnp.int32(0))
-        if arrivals is None:
-            def chunk_body(carry, _):
-                carry, _ = jax.lax.scan(lambda c, x: body(c, None), carry,
-                                        xs=None, length=chunk)
-                return carry, None
-            (state, stats, _, _), _ = jax.lax.scan(chunk_body, carry0,
-                                                   xs=None, length=n_chunks)
-        else:
-            if arrivals.shape[0] != T_eff:
-                raise ValueError(
-                    f"explicit arrivals must have length {T_eff} "
-                    f"(= n_chunks*chunk), got {arrivals.shape[0]}")
-            def chunk_body(carry, a):
-                carry, _ = jax.lax.scan(body, carry, a)
-                return carry, None
-            (state, stats, _, _), _ = jax.lax.scan(
-                chunk_body, carry0,
-                arrivals.astype(jnp.float32).reshape(n_chunks, chunk))
+    def init_carry(pp: PaddedProblem):
+        return (init_state(pp), StreamStats.zero(), ModState.init(pp),
+                jnp.int32(0))
 
+    def chunk_step(pp: PaddedProblem, lam, eps_b, akind, ekind, key, carry):
+        """Advance one chunk of slots.  Pure; the engine jits this with
+        `donate_argnums` on `carry` so the scan carry is updated in place
+        across the Python-level chunk loop (no 2x peak on the [B, N, 3, NC]
+        queue state at fleet batch sizes)."""
+        body = functools.partial(slot, pp, lam, eps_b, akind, ekind, key)
+        carry, _ = jax.lax.scan(lambda c, x: body(c, None), carry,
+                                xs=None, length=chunk)
+        return carry
+
+    def finalize(lam, eps_b, carry) -> Dict[str, jax.Array]:
+        state, stats, _, _ = carry
         mean_q3 = stats.sum_queue_q3 / max(q4_lo - q3_lo, 1)
         mean_q4 = stats.sum_queue_q4 / max(T_eff - q4_lo, 1)
         return {
@@ -192,9 +196,35 @@ def make_stream_runner(cfg: PolicyConfig, T: int, chunk: int = 1024,
             "stable": (mean_q4 <= 1.25 * mean_q3 + 5.0).astype(jnp.float32),
         }
 
+    def run(pp: PaddedProblem, lam, eps_b, akind, ekind, key,
+            arrivals: jax.Array | None = None) -> Dict[str, jax.Array]:
+        carry = init_carry(pp)
+        if arrivals is None:
+            def chunk_body(c, _):
+                return chunk_step(pp, lam, eps_b, akind, ekind, key, c), None
+            carry, _ = jax.lax.scan(chunk_body, carry, xs=None,
+                                    length=n_chunks)
+        else:
+            if arrivals.shape[0] != T_eff:
+                raise ValueError(
+                    f"explicit arrivals must have length {T_eff} "
+                    f"(= n_chunks*chunk), got {arrivals.shape[0]}")
+            body = functools.partial(slot, pp, lam, eps_b, akind, ekind, key)
+            def chunk_body(c, a):
+                c, _ = jax.lax.scan(body, c, a)
+                return c, None
+            carry, _ = jax.lax.scan(
+                chunk_body, carry,
+                arrivals.astype(jnp.float32).reshape(n_chunks, chunk))
+        return finalize(lam, eps_b, carry)
+
     run.T = T_eff
     run.window = win
     run.chunk = chunk
+    run.n_chunks = n_chunks
+    run.init_carry = init_carry
+    run.chunk_step = chunk_step
+    run.finalize = finalize
     return run
 
 
@@ -227,9 +257,56 @@ class FleetResult:
     dims: PadDims
     T: int
     window: int
+    memory_stats: Dict[str, float] | None = None  # XLA memory analysis of the
+                                                  # largest chunk-step program
+                                                  # (run_fleet(memory_stats=True))
 
     def column(self, name: str) -> np.ndarray:
         return np.array([m[name] for m in self.metrics])
+
+
+def make_group_launch(runner, mesh: Mesh):
+    """Jit the three per-group programs of the chunked fleet launch.
+
+    Returns `(init_fn, step_fn, fin_fn)`, each a
+    `jax.jit(shard_map(vmap(...)))` over the `"fleet"` mesh axis.  `step_fn`
+    donates its carry argument (`donate_argnums=6`): across the Python-level
+    chunk loop the [B, N, 3, NC] queue state is updated in place instead of
+    being double-buffered — the memory audit that matters once B·N·NC grows
+    past cache sizes.  Donation is asserted by
+    `tests/test_fleet.py::TestDonation`."""
+    spec = P("fleet")
+
+    def _sharded(fn, n_in):
+        return shard_map(jax.vmap(fn), mesh=mesh, in_specs=(spec,) * n_in,
+                         out_specs=spec,
+                         check_rep=False)  # scan carries: no replication rule
+    init_fn = jax.jit(_sharded(runner.init_carry, 1))
+    step_fn = jax.jit(_sharded(runner.chunk_step, 7), donate_argnums=(6,))
+    fin_fn = jax.jit(_sharded(runner.finalize, 3))
+    return init_fn, step_fn, fin_fn
+
+
+def _memory_analysis(step_fn, args) -> Dict[str, float] | None:
+    """XLA memory analysis of a compiled chunk-step (peak/live byte sizes).
+
+    Best-effort: backends without `memory_analysis` return None."""
+    try:
+        ma = step_fn.lower(*args).compile().memory_analysis()
+        if ma is None:
+            return None
+        # The output carry is donated onto the input carry (aliased), so
+        # counting argument + output + temp would double-count the fleet
+        # state; peak live memory of a launch is arguments + temporaries.
+        return {
+            "argument_bytes": float(ma.argument_size_in_bytes),
+            "output_bytes": float(ma.output_size_in_bytes),
+            "temp_bytes": float(ma.temp_size_in_bytes),
+            "peak_bytes": float(ma.argument_size_in_bytes
+                                + ma.temp_size_in_bytes),
+        }
+    except Exception:  # pragma: no cover - backend-dependent surface
+        return None
 
 
 def _policy_group_key(job: FleetJob):
@@ -246,8 +323,16 @@ def _policy_group_key(job: FleetJob):
 
 def run_fleet(jobs: Sequence[FleetJob], T: int, chunk: int = 1024,
               window: int | None = None, devices=None,
-              dims: PadDims | None = None) -> FleetResult:
-    """Run the whole sweep as one sharded launch per policy group."""
+              dims: PadDims | None = None,
+              memory_stats: bool = False) -> FleetResult:
+    """Run the whole sweep, one compiled program set per policy group.
+
+    Each group runs as a Python-level loop of `n_chunks` launches of one
+    `jit(shard_map(vmap(chunk_step)))` with the scan carry *donated*
+    between launches (`make_group_launch`), so arbitrarily long horizons
+    keep a single in-place copy of the fleet state.  `memory_stats=True`
+    additionally attaches the XLA memory analysis of the largest group's
+    chunk-step program to the result (one extra lowering, so opt-in)."""
     jobs = list(jobs)
     devices = list(devices or jax.devices())
     ndev = len(devices)
@@ -268,6 +353,8 @@ def run_fleet(jobs: Sequence[FleetJob], T: int, chunk: int = 1024,
 
     metrics: List[Dict[str, float] | None] = [None] * len(jobs)
     eff_T = eff_win = 0
+    mem: Dict[str, float] | None = None
+    mem_B = -1
     for gkey, idxs in groups.items():
         cfg = jobs[idxs[0]].policy_config()
         runner = make_stream_runner(cfg, T, chunk=chunk, window=window)
@@ -291,16 +378,18 @@ def run_fleet(jobs: Sequence[FleetJob], T: int, chunk: int = 1024,
         keys = jnp.stack([jax.random.PRNGKey(jobs[i].seed)
                           for i in padded_idxs])
 
-        fn = jax.jit(shard_map(
-            jax.vmap(runner),
-            mesh=mesh,
-            in_specs=(P("fleet"), P("fleet"), P("fleet"), P("fleet"),
-                      P("fleet"), P("fleet")),
-            out_specs=P("fleet"),
-            check_rep=False))   # scan carries have no replication rule yet
-        out = jax.device_get(fn(pp, lam, eps, ak, ek, keys))
+        init_fn, step_fn, fin_fn = make_group_launch(runner, mesh)
+        carry = init_fn(pp)
+        for _ in range(runner.n_chunks):
+            carry = step_fn(pp, lam, eps, ak, ek, keys, carry)
+        if memory_stats and Bp > mem_B:
+            m = _memory_analysis(step_fn, (pp, lam, eps, ak, ek, keys, carry))
+            if m is not None:
+                mem, mem_B = m, Bp
+        out = jax.device_get(fin_fn(lam, eps, carry))
         for j, i in enumerate(idxs):
             metrics[i] = {k: float(v[j]) for k, v in out.items()}
 
     return FleetResult(jobs=jobs, metrics=metrics, n_programs=len(groups),
-                       n_sims=len(jobs), dims=dims, T=eff_T, window=eff_win)
+                       n_sims=len(jobs), dims=dims, T=eff_T, window=eff_win,
+                       memory_stats=mem)

@@ -30,24 +30,28 @@ from repro.sim import workload
 
 
 class ModState(NamedTuple):
-    """Markov-modulation state carried through the scan (O(E) memory).
+    """Markov-modulation state carried through the scan (O(E + NC) memory).
 
     Every event/arrival model receives and returns the full state so all
     `lax.switch` branches share one pytree signature; memoryless models pass
     it through untouched.
 
       link[e] : 1.0 = Good / 0.0 = Bad   (Gilbert–Elliott channel state)
+      comp[n] : 1.0 = Up   / 0.0 = Down  (Gilbert–Elliott comp-node state)
       burst   : 1.0 = ON  / 0.0 = OFF    (Markov-modulated arrival phase)
     """
 
     link: jax.Array    # [E] float32
+    comp: jax.Array    # [NC] float32
     burst: jax.Array   # [] float32
 
     @staticmethod
     def init(sp) -> "ModState":
-        """All links Good, arrivals ON — the chains mix within O(1/p) slots."""
+        """All links Good, all comp nodes Up, arrivals ON — the chains mix
+        within O(1/p) slots."""
         E = sp.edges.shape[-2]
         return ModState(jnp.ones((E,), jnp.float32),
+                        jnp.ones((sp.n_comp,), jnp.float32),
                         jnp.ones((), jnp.float32))
 
 
@@ -155,6 +159,24 @@ GE_P_GB = 0.02           # P(Good -> Bad) per slot, per link
 GE_P_BG = 0.20           # P(Bad -> Good) per slot, per link
 GE_BAD_SCALE = 0.25      # capacity multiplier while Bad
 
+# Comp-node Gilbert–Elliott defaults: stationary P(Down) =
+# P_UD/(P_UD+P_DU) = 0.0625, mean outage 1/P_DU ≈ 6.7 slots.  A Down node
+# keeps its queues but combines nothing and is excluded from the
+# load-balance argmin for the slot (mask gating, DESIGN.md §3).
+GE_COMP_P_UD = 0.01      # P(Up -> Down) per slot, per comp node
+GE_COMP_P_DU = 0.15      # P(Down -> Up) per slot, per comp node
+
+
+def _ge_step(u: jax.Array, good: jax.Array, p_enter_bad: float,
+             p_exit_bad: float) -> jax.Array:
+    """One transition of independent 2-state Good/Bad chains.
+
+    `good` is the current state as float (1.0 = Good/Up); `u` is uniform
+    randomness of the same shape.  Returns the next state as float32."""
+    return jnp.where(good > 0.5,
+                     (u >= p_enter_bad).astype(jnp.float32),
+                     (u < p_exit_bad).astype(jnp.float32))
+
 
 def _ev_gilbert_elliott(sp, t: jax.Array, key: jax.Array, mod: ModState):
     """2-state Markov (Gilbert–Elliott) per-link fading.
@@ -165,12 +187,34 @@ def _ev_gilbert_elliott(sp, t: jax.Array, key: jax.Array, mod: ModState):
     backpressure's implicit re-routing matters — the chain state lives in
     `mod.link` and is updated here, inside the scan."""
     E = sp.edges.shape[-2]
-    u = jax.random.uniform(key, (E,))
-    good = jnp.where(mod.link > 0.5,
-                     (u >= GE_P_GB).astype(jnp.float32),
-                     (u < GE_P_BG).astype(jnp.float32))
+    good = _ge_step(jax.random.uniform(key, (E,)), mod.link, GE_P_GB, GE_P_BG)
     scale = GE_BAD_SCALE + (1.0 - GE_BAD_SCALE) * good
     return scale, _ones(sp)[1], mod._replace(link=good)
+
+
+def _ev_ge_comp(sp, t: jax.Array, key: jax.Array, mod: ModState):
+    """Markov (Gilbert–Elliott) comp-node failures: each computation node
+    runs an independent Up/Down chain in `mod.comp`.
+
+    Unlike the i.i.d. `comp_failures` model, outages persist (mean Down run
+    1/P_DU slots) — the regime of Benoit et al., *Resource Allocation
+    Strategies for In-Network Stream Processing*, where the operative
+    question is whether load balancing reroutes queries around a node that
+    will stay dark for many slots.  The returned comp scale is 0/1; the
+    engine's `with_capacity_scales` gates `comp_mask` with it, so a Down
+    node combines nothing *and* never wins the load-balance argmin."""
+    up = _ge_step(jax.random.uniform(key, (sp.n_comp,)), mod.comp,
+                  GE_COMP_P_UD, GE_COMP_P_DU)
+    return _ones(sp)[0], up, mod._replace(comp=up)
+
+
+def _ev_ge_full(sp, t: jax.Array, key: jax.Array, mod: ModState):
+    """Combined Markov dynamics: Gilbert–Elliott link fading *and* comp-node
+    failures, both chains advancing every slot (independent randomness)."""
+    k_link, k_comp = jax.random.split(key)
+    link_scale, _, mod = _ev_gilbert_elliott(sp, t, k_link, mod)
+    _, comp_up, mod = _ev_ge_comp(sp, t, k_comp, mod)
+    return link_scale, comp_up, mod
 
 
 EVENT_MODELS: Dict[str, Callable] = {
@@ -179,6 +223,8 @@ EVENT_MODELS: Dict[str, Callable] = {
     "link_flaps": _ev_link_flaps,
     "comp_failures": _ev_comp_failures,
     "gilbert_elliott": _ev_gilbert_elliott,
+    "ge_comp": _ev_ge_comp,
+    "ge_full": _ev_ge_full,
 }
 EVENT_MODEL_ORDER: Tuple[str, ...] = tuple(EVENT_MODELS)
 
@@ -308,16 +354,19 @@ def fat_tree(seed: int, pods: int = 2, hosts_per_edge: int = 2,
     core, n = 0, 1                # node 0 is the single core of the mini tree
     aggs, hosts = [], []
     for _ in range(pods):
-        agg = n; n += 1
+        agg, n = n, n + 1
         aggs.append(agg)
-        edges.append((core, agg)); caps.append(core_cap)
+        edges.append((core, agg))
+        caps.append(core_cap)
         for _ in range(2):
-            sw = n; n += 1
-            edges.append((agg, sw)); caps.append(agg_cap)
+            sw, n = n, n + 1
+            edges.append((agg, sw))
+            caps.append(agg_cap)
             for _ in range(hosts_per_edge):
-                h = n; n += 1
+                h, n = n, n + 1
                 hosts.append(h)
-                edges.append((sw, h)); caps.append(host_cap)
+                edges.append((sw, h))
+                caps.append(host_cap)
     g = Graph(n, np.array(edges, np.int32), np.array(caps))
     s1, s2 = int(hosts[0]), int(hosts[-1])       # opposite pods
     dest = int(hosts[len(hosts) // 2])
@@ -416,3 +465,11 @@ register_scenario(Scenario(
 register_scenario(Scenario(
     "bursty_grid", lambda seed: paper_grid_problem(), arrival="markov_onoff",
     description="Paper grid with Markov ON-OFF (correlated bursty) arrivals."))
+register_scenario(Scenario(
+    "ge_comp_grid", lambda seed: paper_grid_problem(), events="ge_comp",
+    description="Paper grid with Markov (Gilbert–Elliott) comp-node "
+                "failures: outages persist for ~1/P_DU slots."))
+register_scenario(Scenario(
+    "ge_full_grid", lambda seed: paper_grid_problem(), events="ge_full",
+    description="Paper grid under combined Markov link fading AND "
+                "comp-node failures."))

@@ -10,8 +10,6 @@ and never re-reads HBM.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl

@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import ARCHS, SHAPES, RunConfig, get_config
+from repro.configs import SHAPES, RunConfig, get_config
 from repro.launch.mesh import make_production_mesh
 from repro.launch import roofline as rl
 from repro.models import get_model

@@ -16,21 +16,18 @@ construction).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import RunConfig, SHAPES, ShapeConfig, get_config, reduced
+from repro.configs import RunConfig, ShapeConfig, get_config, reduced
 from repro.checkpoint import Checkpointer
 from repro.data import DataConfig, TokenStream
 from repro.optim import AdamW, warmup_cosine
-from repro.runtime import sharding as shd
 from repro.runtime.fault import StragglerDetector
-from repro.runtime.step import (TrainState, init_train_state,
-                                make_train_step)
+from repro.runtime.step import init_train_state, make_train_step
 
 
 def build(args):

@@ -12,7 +12,7 @@ launcher, dry-run, serving engine and tests.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .common import Annotated, Init, apply_rope
+from .common import Init, apply_rope
 
 
 class KVCache(NamedTuple):

@@ -11,13 +11,11 @@ shared across head dims like Mamba2's multi-value form), ns = ssm_state.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.runtime.sharding import constrain
 from .common import Init
 
 

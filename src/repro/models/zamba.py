@@ -4,7 +4,6 @@ application).  54 = 9 groups x 6 mamba layers here.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax
@@ -13,7 +12,7 @@ import jax.numpy as jnp
 from repro.runtime.flags import layer_scan
 
 from .attention import init_cache, KVCache
-from .common import (Init, init_mlp, init_norm, norm, swiglu)
+from .common import Init, init_norm, norm
 from .mamba import (MambaState, init_mamba, init_mamba_state, mamba_decode,
                     mamba_fwd, mamba_state_axes)
 from . import transformer as tfm

@@ -8,9 +8,7 @@ state so the launcher / dry-run can derive NamedShardings.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -18,7 +16,6 @@ import jax.numpy as jnp
 from repro.configs.base import RunConfig
 from repro.models import get_model, split_tree
 from repro.runtime.flags import layer_scan
-from repro.models.transformer import ModelState
 from repro.optim import (AdamW, AdamWState, EFState, compress_int8_ef,
                          compress_topk_ef, init_ef, init_ef_abstract,
                          warmup_cosine)

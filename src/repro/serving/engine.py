@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import get_model, split_tree
+from repro.models import get_model
 
 
 @dataclasses.dataclass

@@ -8,9 +8,7 @@ accumulators.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Callable, Dict, NamedTuple
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -15,14 +15,16 @@ from repro.core.queues import StaticProblem, init_state
 from repro.sim import SimResult, simulate
 from repro.sim.simulator import make_trace_runner
 from repro.sim.workload import poisson_arrivals
-from repro.fleet import (FleetJob, ModState, PadDims, get_scenario,
-                         list_scenarios, make_stream_runner, pad_problem,
-                         policy_bound, run_fleet, stack_problems,
+from repro.fleet import (FleetJob, ModState, PadDims, exact_lam_star,
+                         get_scenario, list_scenarios, make_group_launch,
+                         make_stream_runner, pad_problem, policy_bound,
+                         policy_bound_exact, run_fleet, stack_problems,
                          stream_simulate, sweep_jobs)
-from repro.fleet.scenarios import (ARRIVAL_MODELS, ARRIVAL_MODEL_ORDER,
-                                   EVENT_MODELS, EVENT_MODEL_ORDER,
-                                   GE_BAD_SCALE, GE_P_BG, GE_P_GB,
-                                   MMPP_P_OFF_ON, MMPP_P_ON_OFF, SCENARIOS)
+from repro.fleet.scenarios import (ARRIVAL_MODELS, EVENT_MODELS,
+                                   EVENT_MODEL_ORDER, GE_BAD_SCALE,
+                                   GE_COMP_P_DU, GE_COMP_P_UD, GE_P_BG,
+                                   GE_P_GB, MMPP_P_OFF_ON, MMPP_P_ON_OFF,
+                                   SCENARIOS)
 
 TRI = ComputeProblem(triangle_graph(4.0), s1=0, s2=1, dest=2,
                      comp_nodes=(2,), comp_caps=(2.0,))
@@ -345,6 +347,45 @@ class TestScenarios:
         # Markov chain: P(bad, bad) = pi_bad * (1 - P_BG) >> pi_bad^2
         assert p_joint > 3.0 * p_bad ** 2
 
+    def test_ge_comp_chain_stationarity(self):
+        """The per-comp-node Up/Down chain must mix to the chain's stationary
+        distribution P(Up) = P_DU/(P_UD+P_DU), emit only {0, 1} scales, and
+        produce multi-slot outages (the correlated regime)."""
+        pp = pad_problem(paper_grid_problem(), PadDims(16, 24, 4))
+        ge = EVENT_MODELS["ge_comp"]
+
+        def body(carry, k):
+            es, cs, mod = ge(pp, jnp.int32(0), k, carry)
+            return mod, (es, cs)
+
+        T = 8000
+        keys = jax.random.split(jax.random.key(5), T)
+        _, (es, cs) = jax.lax.scan(body, ModState.init(pp), keys)
+        assert np.asarray(es).min() == 1.0          # links untouched
+        vals = np.unique(np.asarray(cs))
+        assert set(vals) <= {np.float32(0.0), np.float32(1.0)}
+        up = np.asarray(cs[T // 4:])                # drop the burn-in
+        pi_up = GE_COMP_P_DU / (GE_COMP_P_UD + GE_COMP_P_DU)
+        assert up.mean() == pytest.approx(pi_up, abs=0.03)
+        # outages persist: consecutive Down slots co-occur far above iid^2
+        down = up < 0.5
+        p_down = down.mean()
+        p_joint = (down[1:] & down[:-1]).mean()
+        assert p_joint > 3.0 * p_down ** 2
+
+    def test_ge_full_advances_both_chains(self):
+        pp = pad_problem(paper_grid_problem(), PadDims(16, 24, 4))
+        ge = EVENT_MODELS["ge_full"]
+
+        def body(carry, k):
+            es, cs, mod = ge(pp, jnp.int32(0), k, carry)
+            return mod, (es, cs)
+
+        keys = jax.random.split(jax.random.key(2), 2000)
+        _, (es, cs) = jax.lax.scan(body, ModState.init(pp), keys)
+        assert np.asarray(es).min() == pytest.approx(GE_BAD_SCALE)  # links fade
+        assert np.asarray(cs).min() == 0.0                          # nodes fail
+
     def test_markov_onoff_arrivals_preserve_mean_and_burst(self):
         """Long-run mean must equal lam; ON/OFF runs must be multi-slot."""
         lam = 2.0
@@ -427,14 +468,157 @@ class TestFleetEngine:
             assert dummy[base + 2] > dummy[base] + 1.0, dummy
 
     def test_markov_scenarios_run_in_fleet(self):
-        """Gilbert–Elliott fading and bursty arrivals ride the same compiled
-        program as static scenarios (chain state lives in the scan carry)."""
+        """Gilbert–Elliott fading, comp-node failure chains, and bursty
+        arrivals all ride the same compiled program as static scenarios
+        (chain state lives in the scan carry)."""
         jobs = [FleetJob(scenario=s, policy="pi3_reg", lam=2.0, eps_b=0.05)
-                for s in ("paper_grid", "ge_grid", "bursty_grid")]
+                for s in ("paper_grid", "ge_grid", "bursty_grid",
+                          "ge_comp_grid", "ge_full_grid")]
         res = run_fleet(jobs, T=256, chunk=64)
         assert res.n_programs == 1
         useful = res.column("useful_rate")
         assert np.all(np.isfinite(useful)) and np.all(useful >= 0.0)
+        # comp outages must cost throughput relative to the static grid at
+        # identical load... but over 256 slots noise dominates; just check
+        # the failing scenarios still deliver
+        assert np.all(res.column("delivered_useful") > 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Comp-node outage mask threading (event scale -> comp_mask -> argmin)
+# ---------------------------------------------------------------------------
+
+class TestCompOutageMasking:
+    def test_zero_comp_scale_excluded_from_argmin(self):
+        """A comp node whose event-model scale is 0 this slot must neither
+        win the load-balance argmin nor combine pairs — the modulated mask
+        path (with_capacity_scales gates comp_mask)."""
+        p = paper_grid_problem()
+        pp = pad_problem(p, PadDims.of([p]))
+        cfg = PolicyConfig(name="pi3")
+        state = init_state(pp)
+        down = jnp.array([1.0, 0.0, 1.0, 0.0], jnp.float32)
+        scaled = pp.with_capacity_scales(jnp.ones(pp.n_edges), down)
+        picks = set()
+        for a in range(16):
+            _, _, m = load_balance_slot(scaled, cfg, state,
+                                        jnp.float32(1.0 + a))
+            picks.add(int(m["n_star"]))
+        assert picks <= {0, 2}
+        # and the mask composes with padding: a padded problem keeps its
+        # padded slots masked after scaling
+        big = pad_problem(p, PadDims(20, 30, 6))
+        scaled_big = big.with_capacity_scales(
+            jnp.ones(big.n_edges), jnp.ones(big.n_comp))
+        assert np.asarray(scaled_big.comp_mask)[4:].max() == 0.0
+
+    def test_downed_node_combines_nothing(self):
+        from repro.core.policies import computation_slot
+        p = paper_grid_problem()
+        pp = pad_problem(p, PadDims.of([p]))
+        state = init_state(pp)
+        # give every comp node combinable pairs
+        state = state._replace(
+            X=jnp.full((4, 2), 5.0),
+            cum_arr=jnp.full((4, 2), 5.0))
+        down = jnp.array([1.0, 0.0, 1.0, 1.0], jnp.float32)
+        scaled = pp.with_capacity_scales(jnp.ones(pp.n_edges), down)
+        new, m = computation_slot(scaled, PolicyConfig(name="pi3bar"), state,
+                                  jnp.zeros(4), jax.random.key(0))
+        consumed = np.asarray(state.X - new.X)[:, 0]
+        assert consumed[1] == 0.0                 # Down node combined nothing
+        assert (consumed[[0, 2, 3]] > 0.0).all()  # Up nodes worked
+
+
+# ---------------------------------------------------------------------------
+# Donated chunked-scan carry (the engine's memory audit)
+# ---------------------------------------------------------------------------
+
+class TestDonation:
+    def test_chunk_runner_carry_buffers_are_donated(self):
+        """The engine's chunk step must donate its carry: after a launch the
+        input carry buffers are deleted (reused in place), not left alive
+        as a second copy of the fleet state."""
+        from jax.sharding import Mesh
+        cfg = PolicyConfig(name="pi3_reg", eps_b=0.05)
+        runner = make_stream_runner(cfg, T=128, chunk=64)
+        mesh = Mesh(np.array(jax.devices()), ("fleet",))
+        ndev = len(jax.devices())
+        pp = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs),
+            *[pad_problem(TRI, PadDims.of([TRI]))] * ndev)
+        lam = jnp.full((ndev,), 1.0, jnp.float32)
+        eps = jnp.full((ndev,), 0.05, jnp.float32)
+        ak = jnp.zeros((ndev,), jnp.int32)
+        ek = jnp.zeros((ndev,), jnp.int32)
+        keys = jnp.stack([jax.random.PRNGKey(i) for i in range(ndev)])
+
+        init_fn, step_fn, fin_fn = make_group_launch(runner, mesh)
+        carry = init_fn(pp)
+        leaves = jax.tree_util.tree_leaves(carry)
+        carry = step_fn(pp, lam, eps, ak, ek, keys, carry)
+        assert all(leaf.is_deleted() for leaf in leaves), (
+            "chunk-step carry was copied, not donated")
+        # non-carry operands must NOT be donated (reused across chunks)
+        assert not jax.tree_util.tree_leaves(pp)[0].is_deleted()
+        carry2 = step_fn(pp, lam, eps, ak, ek, keys, carry)
+        out = jax.device_get(fin_fn(lam, eps, carry2))
+        assert np.all(np.isfinite(out["useful_rate"]))
+
+    def test_chunked_launch_matches_single_program_run(self):
+        """Driving chunk_step from Python (the donated path) must produce
+        exactly the same metrics as the closed single-program `run`."""
+        cfg = PolicyConfig(name="pi3bar")
+        runner = make_stream_runner(cfg, T=256, chunk=64)
+        pp = pad_problem(TRI, PadDims.of([TRI]))
+        args = (jnp.float32(1.5), jnp.float32(0.01), jnp.int32(0),
+                jnp.int32(0), jax.random.PRNGKey(3))
+        ref = jax.jit(runner)(pp, *args)
+        step = jax.jit(runner.chunk_step, donate_argnums=6)
+        carry = jax.jit(runner.init_carry)(pp)
+        for _ in range(runner.n_chunks):
+            carry = step(pp, *args, carry)
+        got = jax.jit(runner.finalize)(args[0], args[1], carry)
+        for k in ref:
+            np.testing.assert_allclose(np.asarray(ref[k]),
+                                       np.asarray(got[k]), rtol=1e-6,
+                                       err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# Exact regulated LP bounds (report layer)
+# ---------------------------------------------------------------------------
+
+class TestExactBounds:
+    def test_bound_exact_between_approx_and_lam_star(self):
+        """On the paper grid: bound_approx <= bound_exact <= bound_approx *
+        (1 + eps_B), and since computation (not links) binds there, the
+        dummy inflation is free: bound_exact == lam_star == 8."""
+        for eps in (0.01, 0.05, 0.2):
+            lam_star = exact_lam_star("paper_grid", 0, 1.0)
+            be = policy_bound_exact("paper_grid", "pi3_reg", eps)
+            ba = policy_bound(lam_star, "pi3_reg", eps)
+            assert ba <= be * (1 + 1e-9)
+            assert be <= ba * (1 + eps) * (1 + 1e-9)
+            assert be == pytest.approx(lam_star)     # comp-capacity bound
+        # link-bound topology: the approximation is tight
+        ls_ft = exact_lam_star("fat_tree", 0, 1.0)
+        assert policy_bound_exact("fat_tree", "pi3_reg", 0.05) == \
+            pytest.approx(ls_ft / 1.05)
+        # unregulated policies: exact bound degenerates to plain lam_star
+        assert policy_bound_exact("paper_grid", "pi3bar", 0.05) == \
+            pytest.approx(exact_lam_star("paper_grid", 0, 1.0))
+
+    def test_exact_lp_solves_are_cached(self):
+        exact_lam_star.cache_clear()
+        policy_bound_exact("paper_grid", "pi3_reg", 0.05)
+        before = exact_lam_star.cache_info()
+        for _ in range(5):
+            policy_bound_exact("paper_grid", "pi3_reg", 0.05)
+            policy_bound_exact("paper_grid", "pi2_reg", 0.05)  # same rho0
+        info = exact_lam_star.cache_info()
+        assert info.misses == before.misses        # no new LP solves
+        assert info.hits >= before.hits + 10
 
 
 # ---------------------------------------------------------------------------
@@ -449,13 +633,24 @@ class TestRegulatedBounds:
             assert policy_bound(8.0, pol, 0.05) == pytest.approx(8.0 / 1.05)
 
     def test_sweep_jobs_scale_offered_by_policy_bound(self):
+        # approx path: regulated rates scale by lam_star/rho0
         jobs = sweep_jobs({"paper_grid": ("pi3bar", "pi3_reg")},
                           rate_fracs=(0.5,), seeds=(0,), eps_b=0.05,
-                          lam_star_of={"paper_grid": 8.0})
+                          lam_star_of={"paper_grid": 8.0}, exact=False)
         lam = {j.policy: j.lam for j in jobs}
         assert lam["pi3bar"] == pytest.approx(4.0)
         assert lam["pi3_reg"] == pytest.approx(4.0 / 1.05)
         assert all(j.eps_b == 0.05 for j in jobs)
+
+    def test_sweep_jobs_exact_uses_regulated_lp(self):
+        """Default (exact) path: on the comp-bound paper grid the regulated
+        LP equals lam_star, so pi3_reg is offered the same rates as pi3bar
+        — the approximation would under-load it by 1/rho0 (DESIGN.md §6)."""
+        jobs = sweep_jobs({"paper_grid": ("pi3bar", "pi3_reg")},
+                          rate_fracs=(0.5,), seeds=(0,), eps_b=0.05)
+        lam = {j.policy: j.lam for j in jobs}
+        assert lam["pi3bar"] == pytest.approx(4.0)
+        assert lam["pi3_reg"] == pytest.approx(4.0)
 
 
 # ---------------------------------------------------------------------------

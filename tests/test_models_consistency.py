@@ -10,7 +10,6 @@ import pytest
 
 from repro.configs import get_config, reduced
 from repro.models import get_model, split_tree
-from repro.models import transformer as tfm
 
 S = 12
 B = 2

@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCHS, SHAPES, get_config, reduced
+from repro.configs import ARCHS, get_config, reduced
 from repro.models import get_model, split_tree
 
 

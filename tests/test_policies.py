@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 
 from repro.core import (ComputeProblem, PolicyConfig, capacity_upper_bound,
-                        line_graph, paper_grid_problem, triangle_graph)
+                        paper_grid_problem, triangle_graph)
 from repro.sim import simulate
 
 

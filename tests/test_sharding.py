@@ -8,8 +8,6 @@ import sys
 import textwrap
 
 import jax
-import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.runtime import sharding as shd
@@ -31,7 +29,6 @@ class TestSpecFor:
         r = shd.Rules(table={"heads": "model"}, mesh=mesh)
         # 14 heads % 16 != 0 on a real 16-way axis -> replicate; here the
         # axis is size 1 so anything divides — emulate via a fake size
-        import dataclasses
         # direct check of the fallback logic with a 16-way mesh is done in
         # the subprocess test below; here check the zero-dim guard
         spec = shd.spec_for((0,), ("heads",), r)

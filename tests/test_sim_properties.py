@@ -1,5 +1,4 @@
 """Hypothesis property tests on the queue-network invariants."""
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -1,7 +1,5 @@
 """Substrate tests: data pipeline, optimizer, compression, checkpointing,
 fault tolerance, serving scheduler + engine."""
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -12,7 +10,7 @@ pytest.importorskip("hypothesis",
 from hypothesis import given, settings, strategies as st
 
 from repro.checkpoint import Checkpointer
-from repro.data import DataConfig, TokenStream, unigram_entropy
+from repro.data import DataConfig, TokenStream
 from repro.optim import (AdamW, compress_int8_ef, compress_topk_ef,
                          global_norm, init_ef, warmup_cosine)
 from repro.runtime.fault import (StragglerConfig, StragglerDetector,
@@ -165,7 +163,7 @@ class TestCheckpoint:
 
     def test_restore_with_shardings(self, tmp_path):
         # resharding path: restore onto the (1-device) mesh explicitly
-        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from jax.sharding import NamedSharding, PartitionSpec as P
         ck = Checkpointer(tmp_path)
         ck.save(2, self._state(2.0))
         mesh = jax.make_mesh((1,), ("data",))
