@@ -14,9 +14,12 @@ exceeds the LP upper bound, pi3 sustains >= 0.8 and pi3_reg >= 0.9 of
 their exact bounds on the paper's 4x4 grid.
 
 The emitted table also records engine throughput (`us_per_sim`,
-`sims_per_sec`) and the XLA memory analysis of the largest chunk-step
-program (`memory.peak_bytes` etc.) — `scripts/check_bench.py` gates
-committed baselines (`BENCH_baseline.json`) against regressions.
+`sims_per_sec`), the XLA memory analysis of the largest chunk-step
+program (`memory.peak_bytes` etc.), and a `backends` section timing the
+same sweep under both slot-decision backends — the XLA oracle and the
+fused Pallas slot kernels (`FleetJob(backend="pallas")`, DESIGN.md §7) —
+with a bit-exact parity gate.  `scripts/check_bench.py` gates committed
+baselines (`BENCH_baseline.json`) against regressions.
 
 Usage:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
@@ -85,6 +88,52 @@ EFFICIENCY_GATES = {
 }
 
 
+#: Backend-comparison sweep (DESIGN.md §7): the same jobs through the XLA
+#: oracle and the fused Pallas slot kernels (interpret mode on CPU), timed
+#: side by side and gated on bit-exact metric parity by check_bench.
+BACKEND_COMPARE = dict(scenario="paper_grid", policy="pi3_reg", eps_b=0.05,
+                       n_jobs=8, lam0=4.0, dlam=0.25, T=512, chunk=128)
+
+
+def backend_compare(emit) -> dict:
+    """Run the BACKEND_COMPARE sweep under both slot-decision backends.
+
+    Each backend gets a warm-up run (compilation; the engine's memoized
+    launches make the second run compile-free) and a timed run.  Returns
+    {"xla": {...}, "pallas": {...}, "parity_max_abs_diff": 0.0} for the
+    bench table's `backends` section."""
+    import numpy as np
+    from repro.fleet import FleetJob, run_fleet
+
+    c = BACKEND_COMPARE
+    out: dict = {}
+    useful = {}
+    for backend in ("xla", "pallas"):
+        jobs = [FleetJob(scenario=c["scenario"], policy=c["policy"],
+                         lam=c["lam0"] + c["dlam"] * s, eps_b=c["eps_b"],
+                         seed=s, backend=backend)
+                for s in range(c["n_jobs"])]
+        run_fleet(jobs, T=c["T"], chunk=c["chunk"])          # warm-up
+        t0 = time.time()
+        res = run_fleet(jobs, T=c["T"], chunk=c["chunk"])
+        wall = time.time() - t0
+        useful[backend] = res.column("useful_rate")
+        out[backend] = {
+            "us_per_sim": wall * 1e6 / len(jobs),
+            "wall_s": wall,
+            "n_sims": len(jobs),
+            "T": res.T,
+        }
+        emit(f"fleet/backends/{backend},{out[backend]['us_per_sim']:.0f},"
+             f"n_sims={len(jobs)} T={res.T}")
+    diff = float(np.max(np.abs(useful["xla"] - useful["pallas"])))
+    out["parity_max_abs_diff"] = diff
+    emit(f"fleet/backends/parity,,max_abs_diff={diff}")
+    assert diff == 0.0, (
+        f"pallas backend diverged from xla by {diff} (DESIGN.md §7)")
+    return out
+
+
 def run(emit, preset: str = "smoke") -> dict:
     from repro.fleet import capacity_report
 
@@ -145,6 +194,10 @@ def run(emit, preset: str = "smoke") -> dict:
             "smoke must sweep a Markov comp-node-failure scenario")
         assert table["n_sims"] >= 64
         assert table["n_programs"] <= 3
+
+    # Side-by-side slot-decision backends (xla oracle vs fused Pallas
+    # kernels), gated on bit-exact parity (DESIGN.md §7).
+    table["backends"] = backend_compare(emit)
     return table
 
 

@@ -1,8 +1,20 @@
 """Kernel benchmarks: interpret-mode Pallas vs jnp reference (correctness +
 CPU timing; real speed lives on TPU — the derived column reports max error).
+
+Emits a JSON table (``--out BENCH_kernels.json``) of per-kernel µs that
+`scripts/check_bench.py` diffs against the committed
+``BENCH_kernels_baseline.json`` with the same >25% regression rule as the
+fleet bench (timing skippable via CHECK_BENCH_SKIP_TIMING=1; the
+exact-match assertions always run).
+
+The ``bp_slot`` sections time the *fused* slot-decision kernels
+(DESIGN.md §7) against their materializing oracles at the fleet smoke pad
+dims (E=45, NC=4) and a scaled point (E=512, NC=16).
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -10,20 +22,74 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_attention.ops import flash_attention_op, attention_ref
 from repro.kernels.bp_route.ops import bp_route_op, bp_route_ref
+from repro.kernels.bp_slot.kernel import comp_balance_decide
+from repro.kernels.bp_slot.ops import slot_route_op, slot_route_op_ref
+from repro.kernels.bp_slot.ref import comp_balance_ref
 from repro.kernels.bp_topk.ops import bp_topk_op, bp_topk_ref
 
 
-def _time(fn, *args, reps=3):
-    fn(*args)  # compile
-    t0 = time.time()
+def _time(fn, *args, reps=5):
+    """Min-of-reps µs timing with an adaptive inner loop: sub-ms kernels
+    are batched until one rep spans >= ~5 ms, so the regression gate in
+    scripts/check_bench.py sees dispatch-noise-free numbers."""
+    jax.block_until_ready(fn(*args))  # compile
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args))
+    once = time.perf_counter() - t0
+    inner = max(1, int(5e-3 / max(once, 1e-9)))
+    best = float("inf")
     for _ in range(reps):
-        jax.block_until_ready(fn(*args))
-    return (time.time() - t0) / reps * 1e6
+        t0 = time.perf_counter()
+        for _ in range(inner):
+            jax.block_until_ready(fn(*args))
+        best = min(best, (time.perf_counter() - t0) / inner)
+    return best * 1e6
+
+
+def _bench_bp_slot(key, emit, table, tag: str, E: int, NC: int, N: int):
+    """Fused slot-decision kernels vs oracles at one (E, NC, N) point."""
+    # routing decision
+    Q = jax.random.uniform(jax.random.fold_in(key, 10), (N, 3, NC)) * 100
+    edges = jax.random.randint(jax.random.fold_in(key, 11), (E, 2), 0, N)
+    edges = edges.at[:, 1].set((edges[:, 1] + 1 + edges[:, 0]) % N)
+    cap = jnp.ones((E,)) * 5.0
+    us_k = _time(slot_route_op, Q, edges, cap)
+    us_r = _time(jax.jit(slot_route_op_ref), Q, edges, cap)
+    out = slot_route_op(Q, edges, cap)
+    ref = slot_route_op_ref(Q, edges, cap)
+    ok = all(bool(jnp.all(a == b)) for a, b in zip(out, ref))
+    emit(f"kernels/bp_slot/route_{tag},{us_k:.0f},"
+         f"exact_match={ok};ref_us={us_r:.0f}")
+    assert ok
+    table[f"bp_slot_route_{tag}"] = {"us": us_k, "ref_us": us_r,
+                                     "E": E, "NC": NC}
+
+    # fused comp/balance decision
+    r = lambda i: jax.random.uniform(jax.random.fold_in(key, 20 + i),
+                                     (NC,)) * 10
+    panels = (r(0), r(1), r(2), r(3), r(4),
+              jnp.ones((NC,)), r(5), r(6), r(7) + 5, r(8) + 5, r(9))
+    x_net = r(10)
+    eps = jnp.float32(0.05)
+    args = (eps,) + panels + (x_net,)
+    fused = jax.jit(lambda *a: comp_balance_decide(*a))
+    oracle = jax.jit(lambda *a: comp_balance_ref(
+        *a, pairing="fifo", thresholded=False, threshold=0.0))
+    us_k = _time(fused, *args)
+    us_r = _time(oracle, *args)
+    Z, n = fused(*args)
+    rZ, rn = oracle(*args)
+    ok = bool(jnp.all(Z == rZ)) and int(n) == int(rn)
+    emit(f"kernels/bp_slot/balance_{tag},{us_k:.0f},"
+         f"exact_match={ok};ref_us={us_r:.0f}")
+    assert ok
+    table[f"bp_slot_balance_{tag}"] = {"us": us_k, "ref_us": us_r, "NC": NC}
 
 
 def run(emit) -> dict:
     key = jax.random.key(0)
-    out = {}
+    kernels: dict = {}
+    table = {"kernels": kernels}
 
     # flash attention — gemma3-like tile (GQA 2:1, window)
     q = jax.random.normal(key, (1, 8, 512, 128), jnp.float32)
@@ -36,7 +102,7 @@ def run(emit) -> dict:
         - attention_ref(q, k, v, causal=True, window=256))))
     emit(f"kernels/flash_attention/interp,{us_k:.0f},max_err={err:.2e};ref_us={us_r:.0f}")
     assert err < 1e-4
-    out["flash"] = err
+    kernels["flash_attention"] = {"us": us_k, "ref_us": us_r, "max_err": err}
 
     # bp_route — fleet-scale control plane: 4096 links x 96 classes
     Q = jax.random.uniform(jax.random.fold_in(key, 3), (512, 96)) * 100
@@ -49,7 +115,7 @@ def run(emit) -> dict:
     ok = bool(jnp.all(cls == rcls) & jnp.all(dirn == rdirn))
     emit(f"kernels/bp_route/interp,{us_k:.0f},exact_match={ok}")
     assert ok
-    out["bp_route"] = ok
+    kernels["bp_route"] = {"us": us_k}
 
     # bp_topk — moonshot gating: 4096 tokens x 64 experts top-6
     scores = jax.random.normal(jax.random.fold_in(key, 5), (4096, 64))
@@ -61,9 +127,24 @@ def run(emit) -> dict:
     werr = float(jnp.max(jnp.abs(w - rw)))
     emit(f"kernels/bp_topk/interp,{us_k:.0f},exact_idx={ok};w_err={werr:.2e}")
     assert ok and werr < 1e-5
-    out["bp_topk"] = werr
-    return out
+    kernels["bp_topk"] = {"us": us_k, "w_err": werr}
+
+    # bp_slot — the fused slot-step decision at fleet pad dims and scaled
+    _bench_bp_slot(key, emit, kernels, "fleet", E=45, NC=4, N=16)
+    _bench_bp_slot(key, emit, kernels, "scaled", E=512, NC=16, N=128)
+    return table
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None, help="write the JSON table here")
+    args = ap.parse_args()
+    table = run(print)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(table, f, indent=2)
+        print(f"wrote {args.out}")
 
 
 if __name__ == "__main__":
-    run(print)
+    main()

@@ -1,26 +1,35 @@
 #!/usr/bin/env python
-"""Bench regression gate (CI: scripts/test.sh, after bench_fleet --preset smoke).
+"""Bench regression gate (CI: scripts/test.sh, after the bench runs).
 
-Compares the freshly-emitted fleet bench table against the committed
-baseline (`BENCH_baseline.json`) and fails on:
+Handles both bench tables by shape:
+
+* **fleet** tables (`benchmarks/bench_fleet.py`) — fails on:
 
   1. >25% per-sim wall-time regression (`us_per_sim`), and
   2. any efficiency-gate breach — the paper-grid rows must keep
      pi3 >= 0.8 and every regulated (`*_reg`) row >= 0.9 of its *exact*
      regulated LP bound (DESIGN.md §6), and
   3. a broken bound invariant (`bound_approx <= bound_exact <=
-     bound_approx * rho0`) anywhere in the table.
+     bound_approx * rho0`) anywhere in the table, and
+  4. a non-zero xla-vs-pallas parity diff in the `backends` section
+     (the bit-identical contract of DESIGN.md §7), when present.
+
+* **kernel** tables (`benchmarks/bench_kernels.py --out`, detected by a
+  top-level `"kernels"` key) — fails on a >25% per-kernel µs regression
+  against the committed `BENCH_kernels_baseline.json` (the exact-match
+  assertions live in the bench itself).
 
 Peak chunk-step memory is reported as a delta but not gated (XLA temp
 sizing is backend/version dependent).
 
 Timing on shared CI hardware is noisy; the threshold can be relaxed via
 CHECK_BENCH_MAX_REGRESSION (default 1.25) or timing can be skipped
-entirely with CHECK_BENCH_SKIP_TIMING=1 (the efficiency/bound gates always
-run).
+entirely with CHECK_BENCH_SKIP_TIMING=1 (the efficiency/bound/parity
+gates always run).
 
 Usage:
   python scripts/check_bench.py BENCH_fleet.json BENCH_baseline.json
+  python scripts/check_bench.py BENCH_kernels.json BENCH_kernels_baseline.json
 """
 from __future__ import annotations
 
@@ -52,7 +61,35 @@ def iter_rows(table: dict):
             yield scen, pol, row
 
 
+def check_kernels(current: dict, baseline: dict) -> list[str]:
+    """Per-kernel µs regression gate for bench_kernels tables."""
+    errors = []
+    if os.environ.get("CHECK_BENCH_SKIP_TIMING", "0") == "1":
+        print("check_bench: kernel timing checks skipped "
+              "(CHECK_BENCH_SKIP_TIMING=1)")
+        return errors
+    max_reg = float(os.environ.get("CHECK_BENCH_MAX_REGRESSION", "1.25"))
+    cur = current.get("kernels", {})
+    for name, base_row in baseline.get("kernels", {}).items():
+        row = cur.get(name)
+        if row is None:
+            errors.append(f"kernel {name} missing from current table")
+            continue
+        base_us, cur_us = base_row.get("us"), row.get("us")
+        if not base_us or cur_us is None:
+            continue
+        ratio = cur_us / base_us
+        print(f"check_bench: kernels/{name} {cur_us:.0f}us vs baseline "
+              f"{base_us:.0f}us (x{ratio:.2f}, limit x{max_reg:.2f})")
+        if ratio > max_reg:
+            errors.append(f"kernels/{name}: us regression {cur_us:.0f} > "
+                          f"{base_us:.0f} * {max_reg:.2f}")
+    return errors
+
+
 def check(current: dict, baseline: dict) -> list[str]:
+    if "kernels" in current:
+        return check_kernels(current, baseline)
     errors = []
 
     # --- 1. wall-time regression
@@ -94,6 +131,21 @@ def check(current: dict, baseline: dict) -> list[str]:
             errors.append(
                 f"{scen}/{pol}: bound invariant broken: approx={ba} "
                 f"exact={be} rho0={rho0}")
+
+    # --- 4. backend parity (xla vs pallas, DESIGN.md §7): bit-identical
+    backends = current.get("backends")
+    if backends:
+        diff = backends.get("parity_max_abs_diff")
+        for name, row in backends.items():
+            if isinstance(row, dict) and "us_per_sim" in row:
+                print(f"check_bench: backend {name} "
+                      f"us_per_sim={row['us_per_sim']:.0f}")
+        if diff is None:
+            errors.append("backends section missing parity_max_abs_diff")
+        elif diff != 0.0:
+            errors.append(f"xla/pallas parity broken: max |diff| = {diff}")
+        else:
+            print("check_bench: xla/pallas parity exact (diff 0.0)")
 
     # --- memory delta: informational only
     cur_mem = (current.get("memory") or {}).get("peak_bytes")

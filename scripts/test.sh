@@ -15,10 +15,15 @@
 #     under doctest;
 #   - a one-job regulated fleet smoke: pi3_reg under Gilbert–Elliott fading
 #     must run end-to-end and deliver useful packets;
+#   - the Pallas parity stanza: the fused slot-kernel suite (marker
+#     `pallas`) re-run under JAX_PLATFORMS=cpu interpret mode, plus the
+#     kernel micro-bench gate (BENCH_kernels.json vs the committed
+#     BENCH_kernels_baseline.json, DESIGN.md §7);
 #   - the bench gate: benchmarks/bench_fleet.py --preset smoke emits
-#     BENCH_fleet.json and scripts/check_bench.py fails on >25% us/sim
-#     regression vs the committed BENCH_baseline.json or any efficiency
-#     gate breach (DESIGN.md §6).
+#     BENCH_fleet.json (incl. the xla-vs-pallas backend section) and
+#     scripts/check_bench.py fails on >25% us/sim regression vs the
+#     committed BENCH_baseline.json, any efficiency gate breach
+#     (DESIGN.md §6), or any xla/pallas parity diff.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -38,7 +43,9 @@ else
     echo "test.sh: ruff not installed; skipping lint gate (pip install -e .[dev])"
 fi
 
-python -m pytest -x -q "$@"
+# The pallas parity suite is excluded here and run once in its dedicated
+# JAX_PLATFORMS=cpu stanza below (same tests, explicit platform pin).
+python -m pytest -x -q -m "not pallas" "$@"
 
 python scripts/check_docs.py
 
@@ -57,7 +64,22 @@ print(f"fleet_smoke: pi3_reg/ge_grid useful_rate={m['useful_rate']:.3f} "
       f"dummy={m['delivered_dummy']:.1f} ok")
 PY
 
-# Bench gate: smoke sweep -> BENCH_fleet.json, regression-checked against
-# the committed baseline.
+# Pallas parity suite, re-run under an explicit CPU platform pin: the
+# fused slot kernels (DESIGN.md §7) must be bit-identical to the XLA
+# oracle in interpret mode — the exact configuration CI runs them in.
+JAX_PLATFORMS=cpu python -m pytest -q -m pallas tests/
+
+# Kernel micro-bench gate: fused bp_slot decide vs reference at fleet pad
+# dims -> BENCH_kernels.json, regression-checked against the committed
+# baseline.  Micro-kernel timings vary more across hosts than the fleet
+# sweep, so the kernel gate gets a 2x allowance (exact-match assertions
+# inside the bench are unconditional).
+python benchmarks/bench_kernels.py --out BENCH_kernels.json
+CHECK_BENCH_MAX_REGRESSION="${CHECK_BENCH_MAX_REGRESSION:-2.0}" \
+    python scripts/check_bench.py BENCH_kernels.json BENCH_kernels_baseline.json
+
+# Bench gate: smoke sweep -> BENCH_fleet.json (incl. the xla-vs-pallas
+# backend comparison section), regression-checked against the committed
+# baseline.
 python benchmarks/bench_fleet.py --preset smoke --out BENCH_fleet.json
 python scripts/check_bench.py BENCH_fleet.json BENCH_baseline.json

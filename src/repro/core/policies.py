@@ -21,6 +21,11 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.bp_slot.kernel import (comp_balance_decide,
+                                          slot_route_decide)
+from repro.kernels.bp_slot.ref import (balance_score, combine_amount,
+                                       pair_count, slot_route_ref)
+
 from .queues import NetState, StaticProblem
 from .regulator import regulator_push
 
@@ -40,6 +45,12 @@ REGULATED_POLICIES = ("pi2", "pi2_reg", "pi3", "pi3_reg")
 KNOWN_POLICIES = ("pi1", "pi1p", "pi2", "pi2_reg", "pi3", "pi3_reg",
                   "pi3bar")
 
+#: Decision backends for the per-slot hot loop (DESIGN.md §7): "xla" runs
+#: the pure-jnp oracle (`repro.kernels.bp_slot.ref`), "pallas" the fused
+#: tiled kernels (`repro.kernels.bp_slot.kernel`) — bit-identical by
+#: construction, selected via `PolicyConfig.backend`.
+KNOWN_BACKENDS = ("xla", "pallas")
+
 
 @dataclasses.dataclass(frozen=True)
 class PolicyConfig:
@@ -51,11 +62,18 @@ class PolicyConfig:
     wireless: bool = False       # §IV-C: node-exclusive interference; links
                                  # activated by greedy maximal matching
                                  # weighted by differential backlog [17,18]
+    backend: str = "xla"         # "xla" | "pallas" — slot-decision kernels
+                                 # (DESIGN.md §7); bit-identical outputs
+    interpret: bool = True       # Pallas interpreter mode (CPU CI); pass
+                                 # False on TPU for compiled kernels
 
     def __post_init__(self):
         if self.name not in KNOWN_POLICIES:
             raise ValueError(
                 f"unknown policy {self.name!r}; known: {KNOWN_POLICIES}")
+        if self.backend not in KNOWN_BACKENDS:
+            raise ValueError(
+                f"unknown backend {self.backend!r}; known: {KNOWN_BACKENDS}")
 
     @property
     def use_regulator(self) -> bool:
@@ -108,7 +126,8 @@ def greedy_maximal_matching(edges: jnp.ndarray, weights: jnp.ndarray,
 
 
 def bp_route_slot(sp: StaticProblem, state: NetState,
-                  wireless: bool = False) -> Tuple[NetState, Dict]:
+                  wireless: bool = False, backend: str = "xla",
+                  interpret: bool = True) -> Tuple[NetState, Dict]:
     """One slot of max-differential-backlog routing over every link.
 
     Per undirected link, the class (i, n) maximizing |Q_m - Q_k| gets the full
@@ -118,6 +137,11 @@ def bp_route_slot(sp: StaticProblem, state: NetState,
 
     wireless=True (paper §IV-C): links interfere node-exclusively; only a
     greedy maximal matching weighted by |differential backlog| transmits.
+
+    backend="pallas" computes the (class, comp, direction) decision with the
+    fused tiled kernel `repro.kernels.bp_slot.slot_route_decide` — the
+    [E, 3*NC] differential tensor is streamed through VMEM instead of
+    materialized — bit-identical to the "xla" oracle (DESIGN.md §7).
     """
     Q, Ddum, X = state.Q, state.Ddum, state.X
     m_idx = jnp.asarray(sp.edges[:, 0])
@@ -125,10 +149,11 @@ def bp_route_slot(sp: StaticProblem, state: NetState,
     cap = jnp.asarray(sp.edge_cap)
     NC = sp.n_comp
 
-    diff = Q[m_idx] - Q[l_idx]                     # [E, 3, NC]
-    flat = diff.reshape(diff.shape[0], -1)         # [E, 3*NC]
-    best = jnp.argmax(jnp.abs(flat), axis=1)       # [E]
-    dmax = jnp.take_along_axis(flat, best[:, None], axis=1)[:, 0]
+    Qf = Q.reshape(Q.shape[0], -1)                 # [N, 3*NC] (i-major)
+    if backend == "pallas":
+        best, dmax = slot_route_decide(Qf, m_idx, l_idx, interpret=interpret)
+    else:
+        best, dmax = slot_route_ref(Qf, m_idx, l_idx)
     best_i = best // NC
     best_n = best % NC
 
@@ -186,18 +211,47 @@ def bp_route_slot(sp: StaticProblem, state: NetState,
 # Pairing / computation (constraint (3) handling — DESIGN.md §1)
 # ---------------------------------------------------------------------------
 
+def _x_net(state: NetState, pairing: str) -> jax.Array | None:
+    """Raw packets in flight (paper eq. (7)) — only the "bound" pairing
+    model consumes it; None keeps the fifo path free of the [N] reduction."""
+    if pairing != "bound":
+        return None
+    return state.Q[:, 1, :].sum(axis=0) + state.Q[:, 2, :].sum(axis=0)  # [NC]
+
+
 def available_pairs(sp: StaticProblem, state: NetState, pairing: str) -> jax.Array:
-    """P_n(t): pairs of same-tag raw packets present at each comp node."""
-    if pairing == "fifo":
-        P = jnp.min(state.cum_arr, axis=1) - state.cum_comb
-    elif pairing == "bound":
-        # Paper eq. (7): P_n >= (X1 + X2 - X(t)) / 2, X(t) = raw in network.
-        X_net = state.Q[:, 1, :].sum(axis=0) + state.Q[:, 2, :].sum(axis=0)   # [NC]
-        P = (state.X[:, 0] + state.X[:, 1] - X_net) / 2.0
-    else:
-        raise ValueError(f"unknown pairing model {pairing!r}")
-    # Physical caps: cannot exceed either side's backlog, never negative.
-    return jnp.clip(P, 0.0, jnp.min(state.X, axis=1))
+    """P_n(t): pairs of same-tag raw packets present at each comp node.
+
+    Delegates to `repro.kernels.bp_slot.ref.pair_count` — the same algebra
+    the fused Pallas kernel evaluates in-tile (DESIGN.md §7)."""
+    return pair_count(state.X[:, 0], state.X[:, 1],
+                      state.cum_arr[:, 0], state.cum_arr[:, 1],
+                      state.cum_comb, _x_net(state, pairing), pairing)
+
+
+def _comp_balance_kernel_call(sp: StaticProblem, cfg: PolicyConfig,
+                              state: NetState, eps: jax.Array):
+    """Invoke the fused comp/balance Pallas kernel on this state snapshot.
+
+    Returns (Z [NC], n_star []) — `load_balance_slot` consumes n_star (on
+    the pre-route state) and `computation_slot` consumes Z (post-route);
+    the fused kernel computes both in one tiled pass either way
+    (DESIGN.md §7)."""
+    comp = jnp.asarray(sp.comp_nodes)
+    nidx = jnp.arange(sp.n_comp)
+    mask = (jnp.ones((sp.n_comp,), state.Q.dtype) if sp.comp_mask is None
+            else jnp.asarray(sp.comp_mask))
+    x_net = _x_net(state, cfg.pairing)
+    if x_net is None:
+        x_net = jnp.zeros((sp.n_comp,), state.X.dtype)
+    return comp_balance_decide(
+        jnp.asarray(eps, state.Q.dtype),
+        state.Q[comp, 0, nidx], state.Q[sp.s1, 1, :], state.Q[sp.s2, 2, :],
+        state.H, jnp.asarray(sp.comp_caps), mask,
+        state.X[:, 0], state.X[:, 1],
+        state.cum_arr[:, 0], state.cum_arr[:, 1], state.cum_comb, x_net,
+        pairing=cfg.pairing, thresholded=cfg.thresholded,
+        threshold=cfg.threshold, interpret=cfg.interpret)
 
 
 def _inject_processed(sp: StaticProblem, state: NetState, amount: jax.Array,
@@ -224,17 +278,20 @@ def computation_slot(sp: StaticProblem, cfg: PolicyConfig, state: NetState,
     engine passes it per job so sweeping the regulator parameter does not
     fork compiled programs (only `cfg.use_regulator` changes control flow).
     """
-    caps = jnp.asarray(sp.comp_caps)
-    if sp.comp_mask is not None:
-        caps = caps * jnp.asarray(sp.comp_mask, jnp.float32)
-    P = available_pairs(sp, state, cfg.pairing)
-    if cfg.thresholded:
-        # pi1': combine C_n only when X1+X2 >= 2 C_n + X̄  (still physically
-        # capped by the pairs actually present).
-        gate = (state.X.sum(axis=1) >= 2.0 * caps + cfg.threshold)
-        Z = jnp.minimum(jnp.where(gate, caps, 0.0), P)
+    if cfg.backend == "pallas":
+        # Fused pairs + threshold + combine (the argmin half of the kernel's
+        # output is the load-balance side; unused on this snapshot).
+        eps = cfg.eps_b if eps_b is None else eps_b
+        Z, _ = _comp_balance_kernel_call(sp, cfg, state, eps)
     else:
-        Z = jnp.minimum(P, caps)                       # combine all possible
+        caps = jnp.asarray(sp.comp_caps)
+        if sp.comp_mask is not None:
+            caps = caps * jnp.asarray(sp.comp_mask, jnp.float32)
+        P = available_pairs(sp, state, cfg.pairing)
+        # pi1' (thresholded): combine C_n only when X1+X2 >= 2 C_n + X̄
+        # (still physically capped by the pairs actually present).
+        Z = combine_amount(P, caps, state.X.sum(axis=1), cfg.thresholded,
+                           cfg.threshold)
     # (masked comp nodes have caps forced to 0 above, so Z == 0 there: P is
     # clipped non-negative in available_pairs)
 
@@ -267,14 +324,19 @@ def load_balance_slot(sp: StaticProblem, cfg: PolicyConfig, state: NetState,
     `cfg.eps_b` with a traced per-job value (see `computation_slot`)."""
     if cfg.load_balance:
         eps = cfg.eps_b if eps_b is None else eps_b
-        score = ((1.0 + eps) * state.Q[jnp.asarray(sp.comp_nodes), 0,
-                                       jnp.arange(sp.n_comp)]
-                 + state.Q[sp.s1, 1, :] + state.Q[sp.s2, 2, :]
-                 + state.H)                                        # eq. (9)
-        if sp.comp_mask is not None:
-            # Masked-out (padded/failed) comp nodes must never win the argmin.
-            score = jnp.where(jnp.asarray(sp.comp_mask) > 0, score, jnp.inf)
-        n_star = jnp.argmin(score)
+        if cfg.backend == "pallas":
+            # Fused kernel on the pre-route snapshot; its Z half is unused
+            # here — computation_slot re-invokes it post-route.
+            _, n_star = _comp_balance_kernel_call(sp, cfg, state, eps)
+        else:
+            score = balance_score(                                 # eq. (9)
+                eps,
+                state.Q[jnp.asarray(sp.comp_nodes), 0,
+                        jnp.arange(sp.n_comp)],
+                state.Q[sp.s1, 1, :], state.Q[sp.s2, 2, :], state.H,
+                # Masked-out (padded/failed) comp nodes never win the argmin.
+                None if sp.comp_mask is None else jnp.asarray(sp.comp_mask))
+            n_star = jnp.argmin(score)
     else:
         n_star = jnp.asarray(cfg.fixed_node, dtype=jnp.int32)
 
@@ -305,9 +367,14 @@ def slot_step(sp: StaticProblem, cfg: PolicyConfig, state: NetState,
               eps_b: jax.Array | None = None) -> Tuple[NetState, Dict]:
     """One slot: (i) admit+load-balance, (ii) BP routing, (iii) computation
     (+ regulator push).  `eps_b=None` uses the static `cfg.eps_b`; a traced
-    array makes the regulator parameter per-job data (fleet sweeps)."""
+    array makes the regulator parameter per-job data (fleet sweeps).
+
+    `cfg.backend` selects the decision implementation — "xla" (the pure-jnp
+    oracle in `repro.kernels.bp_slot.ref`) or "pallas" (the fused tiled
+    kernels, bit-identical; DESIGN.md §7)."""
     state, assigned, m1 = load_balance_slot(sp, cfg, state, arrivals, eps_b)
-    state, m2 = bp_route_slot(sp, state, wireless=cfg.wireless)
+    state, m2 = bp_route_slot(sp, state, wireless=cfg.wireless,
+                              backend=cfg.backend, interpret=cfg.interpret)
     state, m3 = computation_slot(sp, cfg, state, assigned, key, eps_b)
     metrics = {
         "total_queue": state.total_queue(),

@@ -64,12 +64,17 @@ class FleetJob:
     pairing: str = "fifo"
     threshold: float = 0.0
     fixed_node: int = 0
+    backend: str = "xla"          # slot-decision backend: "xla" | "pallas"
+                                  # (fused tiled kernels, DESIGN.md §7)
+    interpret: bool = True        # Pallas interpreter mode — True on CPU CI,
+                                  # False for compiled kernels on TPU
 
     def policy_config(self) -> PolicyConfig:
         return PolicyConfig(
             name=self.policy, eps_b=self.eps_b, pairing=self.pairing,
             threshold=self.threshold, fixed_node=self.fixed_node,
-            wireless=get_scenario(self.scenario).wireless)
+            wireless=get_scenario(self.scenario).wireless,
+            backend=self.backend, interpret=self.interpret)
 
 
 class StreamStats(NamedTuple):
@@ -97,9 +102,16 @@ class StreamStats(NamedTuple):
         return StreamStats(z, z, z, z, z, z, z, z)
 
 
+@functools.lru_cache(maxsize=64)
 def make_stream_runner(cfg: PolicyConfig, T: int, chunk: int = 1024,
                        window: int | None = None):
     """Build `run(pp, lam, eps_b, akind, ekind, key, arrivals=None) -> dict`.
+
+    Memoized on `(cfg, T, chunk, window)` (PolicyConfig is a frozen,
+    hashable dataclass): repeated calls — every `stream_simulate`, every
+    `run_fleet` group with the same shape — get the *same* runner object,
+    so the `jax.jit` caches hanging off it (`make_group_launch`, the
+    `stream_simulate` closed program) are reused instead of re-traced.
 
     `eps_b` is the regulator parameter as *traced per-job data* (ignored by
     unregulated policies); a `ModState` (Gilbert–Elliott link/comp chains,
@@ -209,13 +221,14 @@ def make_stream_runner(cfg: PolicyConfig, T: int, chunk: int = 1024,
                 raise ValueError(
                     f"explicit arrivals must have length {T_eff} "
                     f"(= n_chunks*chunk), got {arrivals.shape[0]}")
+            # Reshape the arrival trace to [n_chunks, chunk] once, ahead of
+            # the chunk scan — not per chunk.
+            arr_chunks = arrivals.astype(jnp.float32).reshape(n_chunks, chunk)
             body = functools.partial(slot, pp, lam, eps_b, akind, ekind, key)
             def chunk_body(c, a):
                 c, _ = jax.lax.scan(body, c, a)
                 return c, None
-            carry, _ = jax.lax.scan(
-                chunk_body, carry,
-                arrivals.astype(jnp.float32).reshape(n_chunks, chunk))
+            carry, _ = jax.lax.scan(chunk_body, carry, arr_chunks)
         return finalize(lam, eps_b, carry)
 
     run.T = T_eff
@@ -242,10 +255,19 @@ def stream_simulate(problem: ComputeProblem, cfg: PolicyConfig, lam: float,
     dims = dims or PadDims.of([problem])
     pp = pad_problem(problem, dims)
     run = make_stream_runner(cfg, T, chunk=chunk, window=window)
-    out = jax.jit(functools.partial(run, arrivals=arrivals))(
+    # `run` is memoized and `arrivals` is passed as a traced operand (None
+    # is static pytree structure), so repeated calls with the same
+    # (cfg, T, chunk, window) share one compiled program instead of
+    # re-jitting a fresh partial per invocation.
+    out = _jit_run(run)(
         pp, jnp.float32(lam), jnp.float32(cfg.eps_b), arrival_code(arrival),
-        event_code(events), jax.random.PRNGKey(seed))
+        event_code(events), jax.random.PRNGKey(seed), arrivals)
     return out
+
+
+@functools.lru_cache(maxsize=64)
+def _jit_run(run):
+    return jax.jit(run)
 
 
 @dataclasses.dataclass
@@ -265,6 +287,7 @@ class FleetResult:
         return np.array([m[name] for m in self.metrics])
 
 
+@functools.lru_cache(maxsize=64)
 def make_group_launch(runner, mesh: Mesh):
     """Jit the three per-group programs of the chunked fleet launch.
 
@@ -274,7 +297,13 @@ def make_group_launch(runner, mesh: Mesh):
     chunk loop the [B, N, 3, NC] queue state is updated in place instead of
     being double-buffered — the memory audit that matters once B·N·NC grows
     past cache sizes.  Donation is asserted by
-    `tests/test_fleet.py::TestDonation`."""
+    `tests/test_fleet.py::TestDonation`.
+
+    Memoized on `(runner, mesh)` (runners are themselves memoized, Mesh is
+    hashable): two sweeps over the same policy group reuse the compiled
+    programs instead of re-tracing, and within one sweep the chunk loop is
+    guaranteed a single compilation
+    (`tests/test_fleet.py::TestNoRecompilation`)."""
     spec = P("fleet")
 
     def _sharded(fn, n_in):
@@ -318,7 +347,10 @@ def _policy_group_key(job: FleetJob):
     ``_reg``-aliased variants, still compiles once per behavior."""
     cfg = job.policy_config()
     return (cfg.use_regulator, cfg.load_balance, cfg.thresholded,
-            cfg.pairing, cfg.threshold, cfg.fixed_node, cfg.wireless)
+            cfg.pairing, cfg.threshold, cfg.fixed_node, cfg.wireless,
+            # interpret only matters when the pallas kernels actually run;
+            # keying it unconditionally would fork identical xla programs.
+            cfg.backend, cfg.interpret if cfg.backend == "pallas" else None)
 
 
 def run_fleet(jobs: Sequence[FleetJob], T: int, chunk: int = 1024,
@@ -360,7 +392,9 @@ def run_fleet(jobs: Sequence[FleetJob], T: int, chunk: int = 1024,
         runner = make_stream_runner(cfg, T, chunk=chunk, window=window)
         eff_T, eff_win = runner.T, runner.window
 
-        # Pad the group batch to a multiple of the mesh size by repeating the
+        # Per-group host work is hoisted to exactly here — one batch of
+        # device constants per group, built *before* the chunk loop.  Pad
+        # the group batch to a multiple of the mesh size by repeating the
         # last job; replicas are dropped when results are scattered back.
         B = len(idxs)
         Bp = -(-B // ndev) * ndev
@@ -375,8 +409,11 @@ def run_fleet(jobs: Sequence[FleetJob], T: int, chunk: int = 1024,
                         for i in padded_idxs], jnp.int32)
         ek = jnp.array([event_code(get_scenario(jobs[i].scenario).events)
                         for i in padded_idxs], jnp.int32)
-        keys = jnp.stack([jax.random.PRNGKey(jobs[i].seed)
-                          for i in padded_idxs])
+        # One vmapped derivation instead of B host-side PRNGKey calls.
+        # int32 keeps negative seeds legal (uint32 would overflow at the
+        # host conversion); PRNGKey folds them identically either way.
+        keys = jax.vmap(jax.random.PRNGKey)(
+            jnp.array([jobs[i].seed for i in padded_idxs], jnp.int32))
 
         init_fn, step_fn, fin_fn = make_group_launch(runner, mesh)
         carry = init_fn(pp)

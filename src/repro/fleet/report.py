@@ -118,6 +118,16 @@ def capacity_report(scenario_policies: Dict[str, Sequence[str]],
     lam_star_of = {
         scen: exact_lam_star(scen, int(topo_seed), 1.0)
         for scen in scenario_policies}
+    # One bound/rho0 lookup per (scenario, policy) group, hoisted out of the
+    # row/point assembly below — the LP solves behind these are LRU-cached
+    # (`exact_lam_star`), so this whole dict costs cache hits only
+    # (asserted by tests/test_fleet.py::TestExactBounds).
+    rho0_of = {pol: PolicyConfig(name=pol, eps_b=eps_b).rho0
+               for pols in scenario_policies.values() for pol in pols}
+    bound_of = {
+        (scen, pol): policy_bound_exact(scen, pol, eps_b,
+                                        topo_seed=topo_seed)
+        for scen, pols in scenario_policies.items() for pol in pols}
     jobs = sweep_jobs(scenario_policies, rate_fracs, seeds,
                       topo_seed=topo_seed, eps_b=eps_b, exact=True)
     res = run_fleet(jobs, T=T, chunk=chunk, window=window, devices=devices,
@@ -144,11 +154,10 @@ def capacity_report(scenario_policies: Dict[str, Sequence[str]],
             stable = np.array([m["stable"] for _, m in rows]) > 0.5
             best = float(useful.max()) if len(useful) else 0.0
             stable_offered = offered[stable] if stable.any() else np.array([0.0])
-            bound_exact = policy_bound_exact(scen, pol, eps_b,
-                                             topo_seed=topo_seed)
+            bound_exact = bound_of[(scen, pol)]
             entry["policies"][pol] = {
                 "best_useful_rate": best,
-                "rho0": PolicyConfig(name=pol, eps_b=eps_b).rho0,
+                "rho0": rho0_of[pol],
                 "bound": bound_exact,
                 "bound_exact": bound_exact,
                 "bound_approx": policy_bound(lam_star, pol, eps_b),

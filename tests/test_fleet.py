@@ -467,6 +467,23 @@ class TestFleetEngine:
         for base in (0, 3):                       # pi3 block, pi3_reg block
             assert dummy[base + 2] > dummy[base] + 1.0, dummy
 
+    def test_pallas_backend_matches_xla_in_fleet(self):
+        """backend="pallas" (interpret mode) through the full sharded
+        engine: separate compiled program, bit-identical metrics
+        (DESIGN.md §7)."""
+        mk = lambda backend: [
+            FleetJob(scenario="paper_grid", policy="pi3_reg", lam=3.0 + s,
+                     eps_b=0.05, seed=s, backend=backend) for s in range(2)]
+        res_x = run_fleet(mk("xla"), T=128, chunk=64)
+        res_p = run_fleet(mk("pallas"), T=128, chunk=64)
+        for k in ("useful_rate", "delivered", "mean_queue", "max_queue"):
+            np.testing.assert_array_equal(res_x.column(k), res_p.column(k),
+                                          err_msg=k)
+        # mixing backends in one sweep forks the compiled program (backend
+        # changes control flow, unlike eps_b)
+        res_mix = run_fleet(mk("xla") + mk("pallas"), T=128, chunk=64)
+        assert res_mix.n_programs == 2
+
     def test_markov_scenarios_run_in_fleet(self):
         """Gilbert–Elliott fading, comp-node failure chains, and bursty
         arrivals all ride the same compiled program as static scenarios
@@ -586,6 +603,57 @@ class TestDonation:
 
 
 # ---------------------------------------------------------------------------
+# Chunk-loop compilation accounting (host-work hoisting, DESIGN.md §4/§7)
+# ---------------------------------------------------------------------------
+
+class TestNoRecompilation:
+    def test_chunk_loop_compiles_step_exactly_once(self):
+        """Driving many chunks through `make_group_launch`'s step_fn must
+        hit one compiled program: all per-chunk operands (padded problem,
+        rates, eps, model codes, keys) are built once per group, so no
+        chunk-loop iteration may retrace."""
+        from jax.sharding import Mesh
+        # a threshold unique to this test keeps the memoized runner/launch
+        # caches from aliasing other tests' entries
+        cfg = PolicyConfig(name="pi3bar", threshold=0.060959)
+        runner = make_stream_runner(cfg, T=256, chunk=32)
+        mesh = Mesh(np.array(jax.devices()), ("fleet",))
+        ndev = len(jax.devices())
+        pp = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs),
+            *[pad_problem(TRI, PadDims.of([TRI]))] * ndev)
+        lam = jnp.full((ndev,), 1.0, jnp.float32)
+        eps = jnp.full((ndev,), 0.01, jnp.float32)
+        ak = jnp.zeros((ndev,), jnp.int32)
+        ek = jnp.zeros((ndev,), jnp.int32)
+        keys = jax.vmap(jax.random.PRNGKey)(
+            jnp.arange(ndev, dtype=jnp.uint32))
+
+        init_fn, step_fn, fin_fn = make_group_launch(runner, mesh)
+        carry = init_fn(pp)
+        for _ in range(runner.n_chunks):
+            carry = step_fn(pp, lam, eps, ak, ek, keys, carry)
+        assert step_fn._cache_size() == 1, (
+            f"chunk loop retraced: {step_fn._cache_size()} compilations")
+        out = jax.device_get(fin_fn(lam, eps, carry))
+        assert np.all(np.isfinite(out["useful_rate"]))
+
+    def test_runner_and_launch_are_memoized(self):
+        """Same (cfg, T, chunk, window) must return the *same* runner and
+        launch objects — re-sweeping a policy group reuses its compiled
+        programs instead of re-tracing (the per-group host-work hoist)."""
+        from jax.sharding import Mesh
+        cfg = PolicyConfig(name="pi3", threshold=0.060959)
+        r1 = make_stream_runner(cfg, T=128, chunk=32)
+        r2 = make_stream_runner(cfg, T=128, chunk=32)
+        assert r1 is r2
+        mesh = Mesh(np.array(jax.devices()), ("fleet",))
+        assert make_group_launch(r1, mesh) is make_group_launch(r2, mesh)
+        # a different horizon is a different runner
+        assert make_stream_runner(cfg, T=256, chunk=32) is not r1
+
+
+# ---------------------------------------------------------------------------
 # Exact regulated LP bounds (report layer)
 # ---------------------------------------------------------------------------
 
@@ -619,6 +687,21 @@ class TestExactBounds:
         info = exact_lam_star.cache_info()
         assert info.misses == before.misses        # no new LP solves
         assert info.hits >= before.hits + 10
+        # Report-layer accounting: a full job expansion plus the hoisted
+        # one-lookup-per-(scenario, policy)-group bound table must solve
+        # each distinct (scenario, rho0) LP exactly once — everything else
+        # is cache hits.
+        exact_lam_star.cache_clear()
+        spec = {"paper_grid": ("pi3bar", "pi3_reg"), "ring": ("pi3_reg",)}
+        sweep_jobs(spec, rate_fracs=(0.5, 0.8, 0.95), seeds=(0, 1),
+                   eps_b=0.05)
+        bounds = {(s, p): policy_bound_exact(s, p, 0.05)
+                  for s, pols in spec.items() for p in pols}
+        info = exact_lam_star.cache_info()
+        # distinct (scenario, rho0) pairs: paper_grid x {1.0, 1.05},
+        # ring x {1.05}
+        assert info.misses == 3, info
+        assert info.hits >= len(bounds), info
 
 
 # ---------------------------------------------------------------------------
