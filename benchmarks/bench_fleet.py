@@ -15,11 +15,16 @@ their exact bounds on the paper's 4x4 grid.
 
 The emitted table also records engine throughput (`us_per_sim`,
 `sims_per_sec`), the XLA memory analysis of the largest chunk-step
-program (`memory.peak_bytes` etc.), and a `backends` section timing the
+program (`memory.peak_bytes` etc.), a `backends` section timing the
 same sweep under both slot-decision backends — the XLA oracle and the
 fused Pallas slot kernels (`FleetJob(backend="pallas")`, DESIGN.md §7) —
-with a bit-exact parity gate.  `scripts/check_bench.py` gates committed
-baselines (`BENCH_baseline.json`) against regressions.
+with a bit-exact parity gate, and a `frontier` section measuring the
+empirical max sustainable rate per target via `find_lambda_max`
+(early-stopped adaptive bisection, DESIGN.md §8): measured
+`lam_max / bound_exact` must land in FRONTIER_RATIO_BAND and the early
+stop must save >= FRONTIER_MIN_SAVED_FRAC of the simulated slots.
+`scripts/check_bench.py` gates committed baselines
+(`BENCH_baseline.json`) against regressions.
 
 Usage:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
@@ -93,6 +98,78 @@ EFFICIENCY_GATES = {
 #: side by side and gated on bit-exact metric parity by check_bench.
 BACKEND_COMPARE = dict(scenario="paper_grid", policy="pi3_reg", eps_b=0.05,
                        n_jobs=8, lam0=4.0, dlam=0.25, T=512, chunk=128)
+
+
+#: Frontier smoke (DESIGN.md §8): adaptive lam_max searches, early-stopped.
+#: T must comfortably cover the backpressure gradient fill-up (the verdict
+#: burn-in is 2 chunks here) or stable rates read as still-growing.
+FRONTIER_SMOKE = dict(
+    targets=(("paper_grid", "pi3"), ("paper_grid", "pi3_reg")),
+    eps_b=0.05, seeds=(0, 1), T=4096, chunk=256, rel_tol=0.025)
+
+#: measured lam_max / bound_exact band for the paper grid (acceptance:
+#: the empirical frontier localizes the exact regulated LP bound from
+#: below).  Imported by scripts/check_bench.py for the CI baseline gate.
+FRONTIER_RATIO_BAND = (0.90, 1.0)
+
+#: minimum fraction of simulated slots the early stop must save across the
+#: whole frontier smoke (per-sim freeze savings, summed over all probes).
+FRONTIER_MIN_SAVED_FRAC = 0.30
+
+
+def frontier_section(emit) -> dict:
+    """Run the FRONTIER_SMOKE searches and gate their ratios/savings.
+
+    Each target runs `find_lambda_max` — exact-LP-seeded bracket, integer
+    bisection on the rel_tol grid, per-probe early stop — and must land
+    its measured lam_max inside FRONTIER_RATIO_BAND of the exact bound
+    while the freeze saves at least FRONTIER_MIN_SAVED_FRAC of the
+    simulated slots in aggregate (DESIGN.md §8)."""
+    from repro.fleet import find_lambda_max
+
+    c = dict(FRONTIER_SMOKE)
+    targets = c.pop("targets")
+    out: dict = {"targets": {}, "T": c["T"], "rel_tol": c["rel_tol"],
+                 "seeds": list(c["seeds"])}
+    saved = full = 0
+    for scen, pol in targets:
+        t0 = time.time()
+        r = find_lambda_max(scen, pol, eps_b=c["eps_b"], seeds=c["seeds"],
+                            T=c["T"], chunk=c["chunk"], rel_tol=c["rel_tol"])
+        wall = time.time() - t0
+        row = {
+            "lam_max": r.lam_max, "bound_exact": r.bound_exact,
+            "ratio": r.ratio, "n_calls": r.n_calls, "n_iters": r.n_iters,
+            "total_slots": r.total_slots, "full_slots": r.full_slots,
+            "slots_saved": r.slots_saved,
+            "slots_saved_frac": r.slots_saved_frac,
+            "launch_slots_saved": r.launch_slots_saved,
+            "n_step_compiles": r.n_step_compiles, "wall_s": wall,
+        }
+        out["targets"][f"{scen}/{pol}"] = row
+        saved += r.slots_saved
+        full += r.full_slots
+        emit(f"fleet/frontier/{scen}/{pol},,lam_max={r.lam_max:.3f} "
+             f"bound_exact={r.bound_exact:.3f} ratio={r.ratio:.3f} "
+             f"calls={r.n_calls} saved_frac={r.slots_saved_frac:.3f} "
+             f"compiles={r.n_step_compiles}")
+        lo, hi = FRONTIER_RATIO_BAND
+        assert lo <= r.ratio <= hi + 1e-9, (
+            f"{scen}/{pol}: lam_max/bound {r.ratio:.3f} outside "
+            f"[{lo}, {hi}]")
+        assert r.n_step_compiles == 1, (
+            f"{scen}/{pol}: bisection compiled {r.n_step_compiles} "
+            "chunk-step programs (must reuse one)")
+    out["slots_saved"] = saved
+    out["full_slots"] = full
+    out["slots_saved_frac"] = saved / full if full else 0.0
+    emit(f"fleet/frontier/slots_saved,,{saved}/{full} "
+         f"frac={out['slots_saved_frac']:.3f} "
+         f"gate>={FRONTIER_MIN_SAVED_FRAC}")
+    assert out["slots_saved_frac"] >= FRONTIER_MIN_SAVED_FRAC, (
+        f"early stopping saved only {out['slots_saved_frac']:.1%} of "
+        f"simulated slots (< {FRONTIER_MIN_SAVED_FRAC:.0%})")
+    return out
 
 
 def backend_compare(emit) -> dict:
@@ -198,6 +275,10 @@ def run(emit, preset: str = "smoke") -> dict:
     # Side-by-side slot-decision backends (xla oracle vs fused Pallas
     # kernels), gated on bit-exact parity (DESIGN.md §7).
     table["backends"] = backend_compare(emit)
+
+    # Adaptive lam_max frontier (DESIGN.md §8): measured frontier must
+    # bracket the exact LP bound, early stop must pay for itself.
+    table["frontier"] = frontier_section(emit)
     return table
 
 

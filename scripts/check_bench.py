@@ -12,7 +12,11 @@ Handles both bench tables by shape:
   3. a broken bound invariant (`bound_approx <= bound_exact <=
      bound_approx * rho0`) anywhere in the table, and
   4. a non-zero xla-vs-pallas parity diff in the `backends` section
-     (the bit-identical contract of DESIGN.md §7), when present.
+     (the bit-identical contract of DESIGN.md §7), when present, and
+  5. a `frontier` section whose measured lam_max/bound_exact leaves
+     FRONTIER_RATIO_BAND, whose bisection recompiled the chunk step, or
+     whose early stop saved less than FRONTIER_MIN_SAVED_FRAC of the
+     simulated slots (DESIGN.md §8), when present.
 
 * **kernel** tables (`benchmarks/bench_kernels.py --out`, detected by a
   top-level `"kernels"` key) — fails on a >25% per-kernel µs regression
@@ -40,19 +44,24 @@ import pathlib
 import sys
 
 
-def _load_gates() -> dict:
-    """Import EFFICIENCY_GATES from benchmarks/bench_fleet.py (the single
-    source of truth — its module top level imports nothing heavy)."""
+def _load_bench_module():
+    """Import benchmarks/bench_fleet.py (the single source of truth for
+    the gate constants — its module top level imports nothing heavy)."""
     path = pathlib.Path(__file__).resolve().parent.parent / "benchmarks" \
         / "bench_fleet.py"
     spec = importlib.util.spec_from_file_location("bench_fleet", path)
     mod = importlib.util.module_from_spec(spec)
     spec.loader.exec_module(mod)
-    return mod.EFFICIENCY_GATES
+    return mod
 
 
+_BENCH = _load_bench_module()
 #: (scenario, policy) -> minimum efficiency vs the exact regulated bound.
-EFFICIENCY_GATES = _load_gates()
+EFFICIENCY_GATES = _BENCH.EFFICIENCY_GATES
+#: lam_max / bound_exact band for frontier targets (DESIGN.md §8).
+FRONTIER_RATIO_BAND = _BENCH.FRONTIER_RATIO_BAND
+#: minimum aggregate early-stop slot savings across the frontier smoke.
+FRONTIER_MIN_SAVED_FRAC = _BENCH.FRONTIER_MIN_SAVED_FRAC
 
 
 def iter_rows(table: dict):
@@ -146,6 +155,33 @@ def check(current: dict, baseline: dict) -> list[str]:
             errors.append(f"xla/pallas parity broken: max |diff| = {diff}")
         else:
             print("check_bench: xla/pallas parity exact (diff 0.0)")
+
+    # --- 5. frontier gates (DESIGN.md §8): the measured lam_max of every
+    # target stays inside the ratio band of its exact LP bound, bisection
+    # steps reuse one compiled program, and the early stop pays for itself.
+    frontier = current.get("frontier")
+    if frontier:
+        lo, hi = FRONTIER_RATIO_BAND
+        for name, row in frontier.get("targets", {}).items():
+            ratio = row.get("ratio")
+            print(f"check_bench: frontier {name} ratio="
+                  f"{'missing' if ratio is None else format(ratio, '.3f')} "
+                  f"(band [{lo}, {hi}]) saved_frac="
+                  f"{row.get('slots_saved_frac', 0):.3f}")
+            if ratio is None or not (lo <= ratio <= hi + 1e-9):
+                errors.append(f"frontier {name}: lam_max/bound_exact "
+                              f"{ratio} outside [{lo}, {hi}]")
+            if row.get("n_step_compiles") != 1:
+                errors.append(f"frontier {name}: bisection compiled "
+                              f"{row.get('n_step_compiles')} chunk-step "
+                              "programs (must be 1)")
+        frac = frontier.get("slots_saved_frac", 0.0)
+        print(f"check_bench: frontier slots_saved_frac {frac:.3f} "
+              f"(gate >= {FRONTIER_MIN_SAVED_FRAC})")
+        if frac < FRONTIER_MIN_SAVED_FRAC:
+            errors.append(f"frontier: early stop saved only {frac:.1%} of "
+                          f"simulated slots "
+                          f"(< {FRONTIER_MIN_SAVED_FRAC:.0%})")
 
     # --- memory delta: informational only
     cur_mem = (current.get("memory") or {}).get("peak_bytes")

@@ -15,15 +15,20 @@
 #     under doctest;
 #   - a one-job regulated fleet smoke: pi3_reg under Gilbert–Elliott fading
 #     must run end-to-end and deliver useful packets;
+#   - a frontier smoke: find_lambda_max (early-stopped adaptive bisection,
+#     DESIGN.md §8) must bracket the paper grid's exact LP bound from
+#     below, launch-only after the first probe, and save slots;
 #   - the Pallas parity stanza: the fused slot-kernel suite (marker
 #     `pallas`) re-run under JAX_PLATFORMS=cpu interpret mode, plus the
 #     kernel micro-bench gate (BENCH_kernels.json vs the committed
 #     BENCH_kernels_baseline.json, DESIGN.md §7);
 #   - the bench gate: benchmarks/bench_fleet.py --preset smoke emits
-#     BENCH_fleet.json (incl. the xla-vs-pallas backend section) and
-#     scripts/check_bench.py fails on >25% us/sim regression vs the
-#     committed BENCH_baseline.json, any efficiency gate breach
-#     (DESIGN.md §6), or any xla/pallas parity diff.
+#     BENCH_fleet.json (incl. the xla-vs-pallas backend section and the
+#     frontier lam_max section) and scripts/check_bench.py fails on >25%
+#     us/sim regression vs the committed BENCH_baseline.json, any
+#     efficiency gate breach (DESIGN.md §6), any xla/pallas parity diff,
+#     a frontier ratio outside [0.90, 1.0], or <30% early-stop savings
+#     (DESIGN.md §8).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -63,6 +68,25 @@ assert m["useful_rate"] >= 0.0 and abs(m["eps_b"] - 0.05) < 1e-6, m
 print(f"fleet_smoke: pi3_reg/ge_grid useful_rate={m['useful_rate']:.3f} "
       f"dummy={m['delivered_dummy']:.1f} ok")
 PY
+
+# frontier_smoke: adaptive lam_max search (early-stopped bisection,
+# DESIGN.md §8) end-to-end on the paper grid — must stay below the exact
+# LP bound, reuse one compiled chunk-step program across probes, and
+# actually save slots.  (The strict [0.90, 1.0] ratio band is gated on
+# the longer-horizon bench section below.)
+python - <<'PY2'
+from repro.fleet import find_lambda_max
+
+r = find_lambda_max("paper_grid", "pi3", eps_b=0.05, seeds=(0,),
+                    T=2048, chunk=256, rel_tol=0.05)
+assert 0.0 < r.lam_max <= r.bound_exact * (1 + 1e-9), (r.lam_max,
+                                                       r.bound_exact)
+assert r.n_step_compiles == 1, r.n_step_compiles
+assert r.slots_saved > 0 and r.launch_slots_saved > 0, r
+print(f"frontier_smoke: lam_max={r.lam_max:.2f} / bound={r.bound_exact:.2f}"
+      f" (ratio {r.ratio:.3f}, {r.n_calls} probes, "
+      f"{100 * r.slots_saved_frac:.0f}% slots saved) ok")
+PY2
 
 # Pallas parity suite, re-run under an explicit CPU platform pin: the
 # fused slot kernels (DESIGN.md §7) must be bit-identical to the XLA

@@ -44,6 +44,114 @@ def kahan_add(s: jax.Array, c: jax.Array, x: jax.Array):
     return t, (t - s) - y
 
 
+# ---------------------------------------------------------------------------
+# Streaming stability verdict: windowed backlog-drift accumulators
+# (DESIGN.md §8).  Pure scalar state + one update per slot, so the whole
+# verdict machinery rides the fleet engine's donated scan carry.
+# ---------------------------------------------------------------------------
+
+VERDICT_UNDECIDED, VERDICT_STABLE, VERDICT_UNSTABLE = 0, 1, 2
+VERDICT_NAMES = ("UNDECIDED", "STABLE", "UNSTABLE")
+
+
+class DriftStats(NamedTuple):
+    """Per-sim drift statistics for the streaming stability verdict.
+
+    ``q_mark``/``useful_mark`` anchor the backlog and delivery counters at
+    the end of the burn-in; every verdict-window boundary after it scores
+    the *anchored* per-slot backlog slope ``(Q(t) - q_mark)/(t - anchor)``
+    (a Lyapunov drift estimate whose noise shrinks as the horizon grows)
+    and the anchored useful delivery rate against the offered rate.
+    Consecutive boundaries of agreeing evidence latch ``verdict`` to
+    STABLE/UNSTABLE at ``decided_at`` (DESIGN.md §8).  All fields are
+    scalars — the accumulator is O(1) per sim.
+    """
+
+    q_mark: jax.Array        # [] total backlog at the burn-in anchor
+    useful_mark: jax.Array   # [] delivered_useful at the burn-in anchor
+    last_drift: jax.Array    # [] anchored per-slot drift at the last boundary
+    last_rate: jax.Array     # [] anchored useful rate at the last boundary
+    stable_run: jax.Array    # [] int32: consecutive stable-evidence windows
+    unstable_run: jax.Array  # [] int32: consecutive unstable-evidence windows
+    verdict: jax.Array       # [] int32: VERDICT_UNDECIDED/STABLE/UNSTABLE
+    decided_at: jax.Array    # [] int32: slot count at which verdict latched
+
+    @staticmethod
+    def zero() -> "DriftStats":
+        z = jnp.zeros((), jnp.float32)
+        zi = jnp.zeros((), jnp.int32)
+        return DriftStats(z, z, z, z, zi, zi, zi, zi)
+
+
+def drift_verdict_update(d: DriftStats, t: jax.Array, total_q: jax.Array,
+                         delivered_useful: jax.Array, lam: jax.Array, *,
+                         window: int, burn_in: int, k_stable: int,
+                         k_unstable: int, drift_tol: float,
+                         gap_tol: float) -> DriftStats:
+    """One slot of the streaming stability verdict (DESIGN.md §8).
+
+    Called with the *post-slot* backlog and cumulative useful deliveries of
+    slot ``t``.  The burn-in end (``t + 1 == burn_in``) anchors the
+    counters, discarding the fill-up transient; at every later window
+    boundary (``(t+1) % window == 0``) two tests are scored against the
+    offered rate ``lam``, both with thresholds scaled by ``max(lam, 1)``
+    so one tolerance spans the rate sweep:
+
+      * Lyapunov-style drift test — the anchored per-slot backlog slope
+        ``drift_a`` at most ``drift_tol`` (stable evidence) / at least it
+        (unstable evidence);
+      * delivered-vs-offered gap check — ``lam - rate_a`` within
+        ``gap_tol`` of zero (stable) / at least the full ``gap_tol``
+        (unstable: a genuinely diverging queue loses throughput *and*
+        grows, so rates just above capacity — drift without much gap —
+        stay UNDECIDED).
+
+    ``k_stable``/``k_unstable`` consecutive boundaries of agreeing
+    evidence latch the verdict; a latched verdict never changes
+    (``decide`` requires ``verdict == UNDECIDED``), which is what makes
+    per-sim freezing safe.
+    """
+    boundary = (t + 1) % window == 0
+    anchor = (t + 1) == burn_in
+    # Evidence only counts once the anchored horizon spans >= 2 windows:
+    # the first post-anchor boundary estimates the slope from `window`
+    # slots, where one unlucky anchor instant dominates the statistic.
+    counted = boundary & (t + 1 >= burn_in + 2 * window)
+    scale = jnp.maximum(lam, 1.0)
+    elapsed = jnp.maximum((t + 1 - burn_in).astype(jnp.float32), 1.0)
+    drift_a = (total_q - d.q_mark) / elapsed
+    rate_a = (delivered_useful - d.useful_mark) / elapsed
+    gap_a = lam - rate_a
+    stable_ev = (drift_a <= drift_tol * scale) & (gap_a <= gap_tol * scale)
+    # Instability must clear a *wider* bar than stability loses: 2x the
+    # drift tolerance and the full gap tolerance, so boundary noise that
+    # merely breaks a stable streak cannot latch UNSTABLE — the region
+    # in between stays UNDECIDED (conservative for the frontier search).
+    unstable_ev = (drift_a >= 2.0 * drift_tol * scale) & \
+        (gap_a >= gap_tol * scale)
+    s_run = jnp.where(counted,
+                      jnp.where(stable_ev, d.stable_run + 1, 0),
+                      d.stable_run)
+    u_run = jnp.where(counted,
+                      jnp.where(unstable_ev, d.unstable_run + 1, 0),
+                      d.unstable_run)
+    newly = jnp.where(s_run >= k_stable, VERDICT_STABLE,
+                      jnp.where(u_run >= k_unstable, VERDICT_UNSTABLE,
+                                VERDICT_UNDECIDED)).astype(jnp.int32)
+    decide = counted & (d.verdict == VERDICT_UNDECIDED) & \
+        (newly != VERDICT_UNDECIDED)
+    return DriftStats(
+        q_mark=jnp.where(anchor, total_q, d.q_mark),
+        useful_mark=jnp.where(anchor, delivered_useful, d.useful_mark),
+        last_drift=jnp.where(counted, drift_a, d.last_drift),
+        last_rate=jnp.where(counted, rate_a, d.last_rate),
+        stable_run=s_run, unstable_run=u_run,
+        verdict=jnp.where(decide, newly, d.verdict),
+        decided_at=jnp.where(decide, (t + 1).astype(jnp.int32),
+                             d.decided_at),
+    )
+
+
 class NetState(NamedTuple):
     Q: jax.Array            # [N, 3, NC]
     Ddum: jax.Array         # [N, NC]

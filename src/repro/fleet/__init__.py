@@ -5,18 +5,23 @@ Public API:
               ARRIVAL_MODELS, EVENT_MODELS
   batching:   PaddedProblem, PadDims, pad_problem, stack_problems
   engine:     FleetJob, FleetResult, run_fleet, stream_simulate,
-              make_stream_runner, make_group_launch
+              make_stream_runner, make_group_launch, VerdictConfig
   report:     capacity_report, sweep_jobs, policy_bound, policy_bound_exact,
               exact_lam_star
+  frontier:   find_lambda_max, FrontierResult, RateProbe, fold_seed
 """
+from repro.core.queues import (VERDICT_NAMES, VERDICT_STABLE,
+                               VERDICT_UNDECIDED, VERDICT_UNSTABLE)
 from .scenarios import (ModState, Scenario, register_scenario, get_scenario,
                         list_scenarios, ARRIVAL_MODELS, EVENT_MODELS,
                         ARRIVAL_MODEL_ORDER, EVENT_MODEL_ORDER)
 from .batching import PaddedProblem, PadDims, pad_problem, stack_problems
-from .engine import (FleetJob, FleetResult, StreamStats, make_group_launch,
+from .engine import (DEFAULT_VERDICT, FleetJob, FleetResult, StreamStats,
+                     VerdictConfig, make_group_launch, resolve_verdict,
                      run_fleet, stream_simulate, make_stream_runner)
 from .report import (capacity_report, exact_lam_star, policy_bound,
                      policy_bound_exact, sweep_jobs)
+from .frontier import FrontierResult, RateProbe, find_lambda_max, fold_seed
 
 __all__ = [
     "ModState", "Scenario", "register_scenario", "get_scenario",
@@ -26,6 +31,10 @@ __all__ = [
     "PaddedProblem", "PadDims", "pad_problem", "stack_problems",
     "FleetJob", "FleetResult", "StreamStats", "make_group_launch",
     "run_fleet", "stream_simulate", "make_stream_runner",
+    "VerdictConfig", "DEFAULT_VERDICT", "resolve_verdict",
+    "VERDICT_NAMES", "VERDICT_UNDECIDED", "VERDICT_STABLE",
+    "VERDICT_UNSTABLE",
     "capacity_report", "exact_lam_star", "policy_bound",
     "policy_bound_exact", "sweep_jobs",
+    "FrontierResult", "RateProbe", "find_lambda_max", "fold_seed",
 ]

@@ -18,10 +18,15 @@ Jobs = (scenario x policy x rate x seed) tuples.  The engine
      10^6+ slots are memory-O(1).
 
 Per-job streaming metrics: trailing-window useful rate, running mean/max
-backlog, a head/tail backlog ratio and the derived stability verdict.
-Backlog sums are Kahan-compensated, and `NetState`'s cumulative delivery
-counters are compensated at the source (`NetState.credit_delivery`), so
-horizons past ~10^7 delivered packets keep exact counts in plain float32.
+backlog, a head/tail backlog ratio and the derived stability heuristic,
+plus the streaming stability *verdict* (DESIGN.md §8): anchored
+Lyapunov-drift statistics in the carry latch each sim
+STABLE/UNSTABLE/UNDECIDED at a chunk boundary, `early_stop=True`
+bit-freezes decided sims and stops launching chunks for fully-decided
+groups.  Backlog sums are Kahan-compensated, and `NetState`'s cumulative
+delivery counters are compensated at the source
+(`NetState.credit_delivery`), so horizons past ~10^7 delivered packets
+keep exact counts in plain float32.
 
 Regulated policies (pi2/pi3 and the explicit `pi2_reg`/`pi3_reg` aliases)
 carry the regulator parameter eps_B as *per-job traced data*, and the
@@ -43,7 +48,9 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.graph import ComputeProblem
 from repro.core.policies import PolicyConfig, slot_step
-from repro.core.queues import init_state, kahan_add
+from repro.core.queues import (DriftStats, VERDICT_NAMES, VERDICT_STABLE,
+                               VERDICT_UNDECIDED, drift_verdict_update,
+                               init_state, kahan_add)
 from .batching import PadDims, PaddedProblem, pad_problem
 from .scenarios import (ARRIVAL_MODELS, ARRIVAL_MODEL_ORDER, EVENT_MODELS,
                         EVENT_MODEL_ORDER, ModState, arrival_code, event_code,
@@ -77,6 +84,44 @@ class FleetJob:
             backend=self.backend, interpret=self.interpret)
 
 
+@dataclasses.dataclass(frozen=True)
+class VerdictConfig:
+    """Streaming stability-verdict parameters (DESIGN.md §8).
+
+    The verdict is *always* computed — `DriftStats` rides the donated scan
+    carry and costs a handful of scalar ops per slot — but only
+    ``freeze=True`` (what `run_fleet(early_stop=True)` resolves to) makes
+    it consequential: a decided sim is bit-frozen in place inside its
+    still-running padded batch, and the engine stops launching chunks for
+    a group once every sim in it has decided.
+
+    A frozen dataclass so it can key the `make_stream_runner` memo cache:
+    two sweeps with the same verdict parameters share compiled programs.
+    """
+
+    window: int = 0        # verdict window in slots; <= 0 -> the chunk size
+    burn_in: int = 0       # slots before evidence counts; <= 0 -> 2 windows
+    k_stable: int = 3      # consecutive stable windows that latch STABLE
+    k_unstable: int = 3    # consecutive unstable windows that latch UNSTABLE
+    drift_tol: float = 0.02   # per-slot drift threshold, x max(lam, 1)
+    gap_tol: float = 0.05     # delivered-vs-offered gap threshold, x max(lam, 1)
+    freeze: bool = False      # bit-freeze decided sims (early-stop semantics)
+
+
+DEFAULT_VERDICT = VerdictConfig()
+
+
+def resolve_verdict(verdict: VerdictConfig | None,
+                    early_stop: bool) -> VerdictConfig:
+    """The verdict config `run_fleet` actually runs: the default when none
+    is given, with ``freeze`` forced on when early stopping is requested.
+    Shared with `fleet.frontier` so cache probes key the same runner."""
+    v = verdict or DEFAULT_VERDICT
+    if early_stop and not v.freeze:
+        v = dataclasses.replace(v, freeze=True)
+    return v
+
+
 class StreamStats(NamedTuple):
     """Online accumulators carried through the scan (O(1) memory).
 
@@ -102,15 +147,16 @@ class StreamStats(NamedTuple):
         return StreamStats(z, z, z, z, z, z, z, z)
 
 
-@functools.lru_cache(maxsize=64)
 def make_stream_runner(cfg: PolicyConfig, T: int, chunk: int = 1024,
-                       window: int | None = None):
+                       window: int | None = None,
+                       verdict: VerdictConfig | None = None):
     """Build `run(pp, lam, eps_b, akind, ekind, key, arrivals=None) -> dict`.
 
-    Memoized on `(cfg, T, chunk, window)` (PolicyConfig is a frozen,
-    hashable dataclass): repeated calls — every `stream_simulate`, every
-    `run_fleet` group with the same shape — get the *same* runner object,
-    so the `jax.jit` caches hanging off it (`make_group_launch`, the
+    Memoized on `(cfg, T, chunk, window, verdict)` (PolicyConfig and
+    VerdictConfig are frozen, hashable dataclasses): repeated calls — every
+    `stream_simulate`, every `run_fleet` group with the same shape, every
+    frontier bisection step — get the *same* runner object, so the
+    `jax.jit` caches hanging off it (`make_group_launch`, the
     `stream_simulate` closed program) are reused instead of re-traced.
 
     `eps_b` is the regulator parameter as *traced per-job data* (ignored by
@@ -133,6 +179,17 @@ def make_stream_runner(cfg: PolicyConfig, T: int, chunk: int = 1024,
     `run.finalize(lam, eps_b, carry)` (the metrics dict).  `run.n_chunks`
     is the number of chunk_step applications that make up one run.
     """
+    # Normalize before the memo key: `verdict=None` and an explicit
+    # DEFAULT_VERDICT must hit the same cache entry, or stream_simulate
+    # (passes None) and run_fleet (passes the resolved config) would each
+    # compile their own copy of an identical program.
+    return _make_stream_runner(cfg, T, chunk, window,
+                               verdict or DEFAULT_VERDICT)
+
+
+@functools.lru_cache(maxsize=64)
+def _make_stream_runner(cfg: PolicyConfig, T: int, chunk: int,
+                        window: int | None, verdict: VerdictConfig):
     chunk = max(1, min(chunk, T))
     n_chunks = -(-T // chunk)
     T_eff = n_chunks * chunk
@@ -140,29 +197,35 @@ def make_stream_runner(cfg: PolicyConfig, T: int, chunk: int = 1024,
     win = max(win, 1)             # T==1 / window==0 would divide by zero
     mark = T_eff - win            # windowed rate baseline: end of slot mark-1
     q3_lo, q4_lo = T_eff // 2, (3 * T_eff) // 4
+    vcfg = verdict
+    # Verdict windows default to the chunk length so decisions land exactly
+    # on the boundaries the engine's Python chunk loop can observe; the
+    # burn-in skips the fill-up transient (DESIGN.md §8).
+    vwin = chunk if vcfg.window <= 0 else max(1, min(vcfg.window, T_eff))
+    vburn = 2 * vwin if vcfg.burn_in <= 0 else vcfg.burn_in
 
     arrival_branches = tuple(ARRIVAL_MODELS[k] for k in ARRIVAL_MODEL_ORDER)
     event_branches = tuple(EVENT_MODELS[k] for k in EVENT_MODEL_ORDER)
 
     def slot(pp, lam, eps_b, akind, ekind, key, carry, slot_arr):
-        state, stats, mod, t = carry
+        state, stats, drift, mod, t = carry
         kt = jax.random.fold_in(key, t)
         k_arr, k_ev, k_step = jax.random.split(kt, 3)
         if slot_arr is None:
-            arr, mod = jax.lax.switch(akind, arrival_branches, k_arr, lam,
-                                      mod)
-        else:
-            arr = slot_arr
-        esc, csc, mod = jax.lax.switch(ekind, event_branches, pp, t, k_ev,
+            arr, mod2 = jax.lax.switch(akind, arrival_branches, k_arr, lam,
                                        mod)
-        state, m = slot_step(pp.with_capacity_scales(esc, csc), cfg, state,
-                             arr, k_step, eps_b=eps_b)
+        else:
+            arr, mod2 = slot_arr, mod
+        esc, csc, mod2 = jax.lax.switch(ekind, event_branches, pp, t, k_ev,
+                                        mod2)
+        new_state, m = slot_step(pp.with_capacity_scales(esc, csc), cfg,
+                                 state, arr, k_step, eps_b=eps_b)
         tq = m["total_queue"]
         sq, cq = kahan_add(stats.sum_queue, stats.c_queue, tq)
         s3, c3 = kahan_add(stats.sum_queue_q3, stats.c_q3,
                            tq * ((t >= q3_lo) & (t < q4_lo)))
         s4, c4 = kahan_add(stats.sum_queue_q4, stats.c_q4, tq * (t >= q4_lo))
-        stats = StreamStats(
+        new_stats = StreamStats(
             sum_queue=sq, c_queue=cq,
             sum_queue_q3=s3, c_q3=c3,
             sum_queue_q4=s4, c_q4=c4,
@@ -170,11 +233,27 @@ def make_stream_runner(cfg: PolicyConfig, T: int, chunk: int = 1024,
             useful_at_mark=jnp.where(t == mark - 1, m["delivered_useful"],
                                      stats.useful_at_mark),
         )
-        return (state, stats, mod, t + 1), None
+        new_drift = drift_verdict_update(
+            drift, t, tq, m["delivered_useful"], lam,
+            window=vwin, burn_in=vburn, k_stable=vcfg.k_stable,
+            k_unstable=vcfg.k_unstable, drift_tol=vcfg.drift_tol,
+            gap_tol=vcfg.gap_tol)
+        new_carry = (new_state, new_stats, new_drift, mod2, t + 1)
+        if vcfg.freeze:
+            # Per-sim freeze mask: a sim whose verdict latched *before*
+            # this slot passes its whole carry through bit-unchanged (t
+            # included, so the RNG stream and window marks stay pinned at
+            # decided_at) while the rest of the padded batch keeps
+            # running.  where(False, old, new) is exactly `new`, so
+            # undecided sims are bit-identical to a freeze-free run.
+            frozen = drift.verdict != VERDICT_UNDECIDED
+            new_carry = jax.tree_util.tree_map(
+                lambda o, n: jnp.where(frozen, o, n), carry, new_carry)
+        return new_carry, None
 
     def init_carry(pp: PaddedProblem):
-        return (init_state(pp), StreamStats.zero(), ModState.init(pp),
-                jnp.int32(0))
+        return (init_state(pp), StreamStats.zero(), DriftStats.zero(),
+                ModState.init(pp), jnp.int32(0))
 
     def chunk_step(pp: PaddedProblem, lam, eps_b, akind, ekind, key, carry):
         """Advance one chunk of slots.  Pure; the engine jits this with
@@ -187,25 +266,53 @@ def make_stream_runner(cfg: PolicyConfig, T: int, chunk: int = 1024,
         return carry
 
     def finalize(lam, eps_b, carry) -> Dict[str, jax.Array]:
-        state, stats, _, _ = carry
+        state, stats, drift, _, t = carry
         mean_q3 = stats.sum_queue_q3 / max(q4_lo - q3_lo, 1)
         mean_q4 = stats.sum_queue_q4 / max(T_eff - q4_lo, 1)
+        decided = drift.verdict != VERDICT_UNDECIDED
+        decided_at = jnp.where(decided, drift.decided_at,
+                               T_eff).astype(jnp.float32)
+        # Heuristic verdict comparing the 3rd vs 4th quarter of the run
+        # (both past the fill-up transient): a stable network's backlog
+        # plateaus, so the ratio stays near 1; linearly growing backlog
+        # (instability) gives mean_q4/mean_q3 -> 7/5.
+        stable_heur = mean_q4 <= 1.25 * mean_q3 + 5.0
+        useful_rate = (state.delivered_useful - stats.useful_at_mark) / win
+        # `t` is the per-sim slots-advanced counter (frozen sims pin it at
+        # decided_at); dividing by it — a *runtime* value in every program
+        # — keeps frozen and full-horizon runs emitting the identical
+        # division op, so their mean_queue agrees bit-for-bit (a constant
+        # T_eff denominator would constant-fold to a reciprocal multiply).
+        mean_queue = stats.sum_queue / jnp.maximum(t.astype(jnp.float32),
+                                                   1.0)
+        slots_saved = jnp.zeros((), jnp.float32)
+        if vcfg.freeze:
+            # A frozen sim's accumulators stop at decided_at: the trailing
+            # useful-rate window and the q3/q4 heuristic never complete, so
+            # report the last full verdict window's (anchored) rate and let
+            # the latched verdict *be* the stability flag.
+            useful_rate = jnp.where(decided, drift.last_rate, useful_rate)
+            stable_heur = jnp.where(decided, drift.verdict == VERDICT_STABLE,
+                                    stable_heur)
+            slots_saved = jnp.where(decided, T_eff - decided_at, 0.0)
         return {
             "offered": jnp.asarray(lam, jnp.float32),
             "eps_b": jnp.asarray(eps_b, jnp.float32),
-            "useful_rate": (state.delivered_useful - stats.useful_at_mark) / win,
+            "useful_rate": useful_rate,
             "delivered": state.delivered,
             "delivered_useful": state.delivered_useful,
             "delivered_dummy": state.delivered - state.delivered_useful,
-            "mean_queue": stats.sum_queue / T_eff,
+            "mean_queue": mean_queue,
             "mean_queue_mid": mean_q3,
             "mean_queue_tail": mean_q4,
             "max_queue": stats.max_queue,
-            # Heuristic verdict comparing the 3rd vs 4th quarter of the run
-            # (both past the fill-up transient): a stable network's backlog
-            # plateaus, so the ratio stays near 1; linearly growing backlog
-            # (instability) gives mean_q4/mean_q3 -> 7/5.
-            "stable": (mean_q4 <= 1.25 * mean_q3 + 5.0).astype(jnp.float32),
+            "stable": stable_heur.astype(jnp.float32),
+            # Streaming verdict (DESIGN.md §8): latched drift-test outcome,
+            # the slot it latched at (= T for undecided sims), and the
+            # simulated slots the freeze saved (0 unless freezing is on).
+            "verdict": drift.verdict.astype(jnp.float32),
+            "decided_at_slot": decided_at,
+            "slots_saved": slots_saved,
         }
 
     def run(pp: PaddedProblem, lam, eps_b, akind, ekind, key,
@@ -235,9 +342,14 @@ def make_stream_runner(cfg: PolicyConfig, T: int, chunk: int = 1024,
     run.window = win
     run.chunk = chunk
     run.n_chunks = n_chunks
+    run.verdict_window = vwin
+    run.verdict_burn_in = vburn
     run.init_carry = init_carry
     run.chunk_step = chunk_step
     run.finalize = finalize
+    # Cheap between-chunk readout: the [B] int32 verdict leaf of the carry
+    # (the only thing `run_fleet` transfers per chunk when early-stopping).
+    run.verdict_of = lambda carry: carry[2].verdict
     return run
 
 
@@ -282,9 +394,19 @@ class FleetResult:
     memory_stats: Dict[str, float] | None = None  # XLA memory analysis of the
                                                   # largest chunk-step program
                                                   # (run_fleet(memory_stats=True))
+    slots_saved: int = 0          # sum of per-sim frozen slots (early stop):
+                                  # simulated slots never advanced past each
+                                  # sim's decided_at_slot
+    launch_slots_saved: int = 0   # device-level savings: slots in chunk
+                                  # launches skipped once a whole group
+                                  # decided (<= slots_saved)
 
     def column(self, name: str) -> np.ndarray:
         return np.array([m[name] for m in self.metrics])
+
+    def verdicts(self) -> List[str]:
+        """Per-job streaming verdicts as names (DESIGN.md §8)."""
+        return [VERDICT_NAMES[int(m["verdict"])] for m in self.metrics]
 
 
 @functools.lru_cache(maxsize=64)
@@ -356,7 +478,9 @@ def _policy_group_key(job: FleetJob):
 def run_fleet(jobs: Sequence[FleetJob], T: int, chunk: int = 1024,
               window: int | None = None, devices=None,
               dims: PadDims | None = None,
-              memory_stats: bool = False) -> FleetResult:
+              memory_stats: bool = False,
+              early_stop: bool = False,
+              verdict: VerdictConfig | None = None) -> FleetResult:
     """Run the whole sweep, one compiled program set per policy group.
 
     Each group runs as a Python-level loop of `n_chunks` launches of one
@@ -364,8 +488,19 @@ def run_fleet(jobs: Sequence[FleetJob], T: int, chunk: int = 1024,
     between launches (`make_group_launch`), so arbitrarily long horizons
     keep a single in-place copy of the fleet state.  `memory_stats=True`
     additionally attaches the XLA memory analysis of the largest group's
-    chunk-step program to the result (one extra lowering, so opt-in)."""
+    chunk-step program to the result (one extra lowering, so opt-in).
+
+    ``early_stop=True`` turns the streaming stability verdict
+    (DESIGN.md §8) into an actual early exit: decided sims are bit-frozen
+    inside their still-running padded batch (``VerdictConfig.freeze``),
+    the [B] verdict leaf is read back between chunk launches, and a group
+    stops launching chunks as soon as *every* sim in it has decided.
+    Per-sim savings land in each row's ``slots_saved`` (simulated slots
+    never advanced past ``decided_at_slot``); launch-level savings — the
+    chunks that were never dispatched — in ``FleetResult.launch_slots_saved``.
+    """
     jobs = list(jobs)
+    vcfg = resolve_verdict(verdict, early_stop)
     devices = list(devices or jax.devices())
     ndev = len(devices)
     mesh = Mesh(np.array(devices), ("fleet",))
@@ -385,11 +520,13 @@ def run_fleet(jobs: Sequence[FleetJob], T: int, chunk: int = 1024,
 
     metrics: List[Dict[str, float] | None] = [None] * len(jobs)
     eff_T = eff_win = 0
+    launch_saved = 0
     mem: Dict[str, float] | None = None
     mem_B = -1
     for gkey, idxs in groups.items():
         cfg = jobs[idxs[0]].policy_config()
-        runner = make_stream_runner(cfg, T, chunk=chunk, window=window)
+        runner = make_stream_runner(cfg, T, chunk=chunk, window=window,
+                                    verdict=vcfg)
         eff_T, eff_win = runner.T, runner.window
 
         # Per-group host work is hoisted to exactly here — one batch of
@@ -417,8 +554,20 @@ def run_fleet(jobs: Sequence[FleetJob], T: int, chunk: int = 1024,
 
         init_fn, step_fn, fin_fn = make_group_launch(runner, mesh)
         carry = init_fn(pp)
+        launched = 0
         for _ in range(runner.n_chunks):
             carry = step_fn(pp, lam, eps, ak, ek, keys, carry)
+            launched += 1
+            if early_stop and launched < runner.n_chunks:
+                # Between-chunk readout of the [Bp] int32 verdict leaf —
+                # the mid-run readout the donated-carry structure permits.
+                # All sims (mesh-padding replicas mirror a real job)
+                # decided => the remaining chunks would only shuffle
+                # frozen bits; stop dispatching them.
+                v = np.asarray(jax.device_get(runner.verdict_of(carry)))
+                if np.all(v != VERDICT_UNDECIDED):
+                    break
+        launch_saved += len(idxs) * (runner.n_chunks - launched) * runner.chunk
         if memory_stats and Bp > mem_B:
             m = _memory_analysis(step_fn, (pp, lam, eps, ak, ek, keys, carry))
             if m is not None:
@@ -429,4 +578,7 @@ def run_fleet(jobs: Sequence[FleetJob], T: int, chunk: int = 1024,
 
     return FleetResult(jobs=jobs, metrics=metrics, n_programs=len(groups),
                        n_sims=len(jobs), dims=dims, T=eff_T, window=eff_win,
-                       memory_stats=mem)
+                       memory_stats=mem,
+                       slots_saved=int(sum(m["slots_saved"]
+                                           for m in metrics)),
+                       launch_slots_saved=launch_saved)

@@ -1,0 +1,238 @@
+"""Adaptive λ_max frontier search: bisection over early-stopped fleet runs.
+
+The paper's headline quantity is the *maximum sustainable query rate*
+λ_max.  `find_lambda_max` measures it empirically: it brackets the PR-3
+exact regulated LP bound (`fleet.report.policy_bound_exact`), then bisects
+the offered rate over successive `run_fleet` calls, each early-stopped by
+the streaming stability verdict (DESIGN.md §8) — a rate is *sustainable*
+iff every seed's sim latches STABLE.  The search contract:
+
+  * **Grid quantization.**  Probed rates live on the fixed grid
+    ``lam = k * rel_tol * bound`` (integer ``k``), so bisection from *any*
+    valid initial bracket converges to the same boundary index — the
+    golden-frontier invariance property.  The final bracket width is one
+    grid step, i.e. λ_max is localized to ``rel_tol`` relative to the bound.
+  * **Seed decoupling.**  Each probe's per-seed PRNG seeds are SplitMix64
+    folds of ``(topo_seed, rate_index, call_index, seed)`` (`fold_seed`) —
+    NOT the raw job seed — so two bisection steps at different rates never
+    share arrival streams.  Within one search every grid index is
+    evaluated at most once (memoized), always with ``call_index = 0``, so
+    probes are deterministic per rate and the bracket-invariance above
+    holds exactly; a driver that *re*-probes a rate for confirmation
+    passes ``call_index > 0`` to draw fresh noise.
+  * **Launch-only steps.**  Every probe reuses the same memoized
+    `make_stream_runner`/`make_group_launch` programs (identical policy
+    config, shapes, and verdict config), so after the first call each
+    bisection step is launch-only — asserted via
+    `FrontierResult.n_step_compiles == 1`.
+
+Verdict aggregation is conservative: UNDECIDED (like UNSTABLE) counts as
+unsustainable, so λ_max is biased *down*, never above the true frontier.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from .engine import (FleetJob, VerdictConfig, make_group_launch,
+                     make_stream_runner, resolve_verdict, run_fleet)
+from .report import policy_bound_exact
+
+_M64 = (1 << 64) - 1
+
+
+def _mix64(x: int) -> int:
+    """SplitMix64 finalizer: a bijective avalanche on 64-bit ints."""
+    x &= _M64
+    x ^= x >> 30
+    x = (x * 0xBF58476D1CE4E5B9) & _M64
+    x ^= x >> 27
+    x = (x * 0x94D049BB133111EB) & _M64
+    x ^= x >> 31
+    return x
+
+
+def fold_seed(topo_seed: int, rate_index: int, call_index: int,
+              seed: int = 0) -> int:
+    """Derive one probe's PRNG seed from the bisection coordinates.
+
+    Successive `run_fleet` calls in the bisection loop must NOT reuse the
+    raw job seed: two probes at different rates would then draw the same
+    uniforms, coupling their arrival streams (identical noise at every
+    probed rate biases the measured frontier).  Folding
+    ``(topo_seed, rate_index, call_index, seed)`` through SplitMix64
+    decouples every axis while staying deterministic — `find_lambda_max`
+    always probes with ``call_index = 0`` (each grid index is evaluated
+    once per search), which is what makes the search invariant to the
+    initial bracket; confirmation re-probes pass ``call_index > 0`` for
+    fresh noise.  Returns a non-negative int31, safe for
+    `jax.random.PRNGKey` via the engine's int32 path."""
+    h = (0x9E3779B97F4A7C15 * (topo_seed & _M64)
+         + 0xBF58476D1CE4E5B9 * (rate_index & _M64)
+         + 0x94D049BB133111EB * (call_index & _M64)
+         + 0xD6E8FEB86659FD93 * (seed & _M64) + 0x2545F4914F6CDD1D) & _M64
+    return int(_mix64(h) & 0x7FFFFFFF)
+
+
+@dataclasses.dataclass(frozen=True)
+class RateProbe:
+    """One evaluated rate of the frontier search."""
+
+    rate_index: int          # grid index k (lam = k * rel_tol * bound)
+    call_index: int          # how many times this rate had been probed before
+    lam: float
+    sustainable: bool        # all seeds latched STABLE
+    verdicts: Tuple[str, ...]
+    decided_at: Tuple[int, ...]
+    slots_run: int           # simulated slots actually advanced
+    slots_saved: int         # simulated slots the freeze skipped
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontierResult:
+    """Outcome of `find_lambda_max` (DESIGN.md §8)."""
+
+    scenario: str
+    policy: str
+    eps_b: float
+    topo_seed: int
+    lam_max: float           # largest grid rate verified sustainable
+    bound_exact: float       # the exact regulated LP bound it is measured against
+    ratio: float             # lam_max / bound_exact
+    lo: float                # final bracket: sustainable side
+    hi: float                # final bracket: unsustainable side (lo + grid step)
+    n_calls: int             # run_fleet launches issued
+    n_iters: int             # bisection halvings (excl. bracket validation)
+    total_slots: int         # simulated slots advanced across all probes
+    full_slots: int          # slots a no-early-stop search would have run
+    slots_saved: int         # full_slots - total_slots (per-sim freeze savings)
+    launch_slots_saved: int  # chunks never dispatched once groups decided
+    n_step_compiles: int     # compiled chunk-step programs used (must be 1)
+    probes: Tuple[RateProbe, ...]
+
+    @property
+    def slots_saved_frac(self) -> float:
+        return self.slots_saved / self.full_slots if self.full_slots else 0.0
+
+
+def find_lambda_max(scenario: str, policy: str = "pi3", *,
+                    eps_b: float = 0.01, topo_seed: int = 0,
+                    seeds: Sequence[int] = (0, 1), T: int = 4096,
+                    chunk: int = 512, window: int | None = None,
+                    rel_tol: float = 0.025,
+                    bracket: Tuple[float, float] = (0.5, 1.1),
+                    max_calls: int = 24, early_stop: bool = True,
+                    verdict: VerdictConfig | None = None,
+                    devices=None) -> FrontierResult:
+    """Locate the empirical max sustainable rate λ_max of one (scenario,
+    policy) pair by bisecting offered rate over early-stopped fleet runs.
+
+    ``bracket`` is the initial (lo, hi) as *fractions of the exact bound*;
+    it is validated first (lo must be sustainable, hi unsustainable) and
+    expanded/shrunk on the quantized grid if not.  Every probe runs
+    ``len(seeds)`` sims through `run_fleet(early_stop=...)`; the probe is
+    sustainable iff all of them latch STABLE.  See the module docstring
+    for the quantization / seed-fold / launch-only contract."""
+    bound = policy_bound_exact(scenario, policy, eps_b, topo_seed=topo_seed)
+    if bound <= 0.0:
+        raise ValueError(f"{scenario}: exact LP bound is {bound}; "
+                         "nothing to bisect")
+    step = rel_tol * bound
+    vcfg = resolve_verdict(verdict, early_stop)
+    seeds = tuple(seeds)
+
+    probes: List[RateProbe] = []
+    cache: Dict[int, RateProbe] = {}
+    launch_saved = [0]
+
+    def evaluate(k: int) -> bool:
+        if k <= 0:
+            return True               # lam = 0 is trivially sustainable
+        if k in cache:
+            return cache[k].sustainable
+        if len(probes) >= max_calls:
+            return False              # budget exhausted: stay conservative
+        # Each grid index is evaluated once per search (the memo above),
+        # always at call_index 0 — deterministic per rate, which is what
+        # makes the result invariant to the initial bracket.
+        jobs = [FleetJob(scenario=scenario, policy=policy, lam=k * step,
+                         eps_b=eps_b, topo_seed=topo_seed,
+                         seed=fold_seed(topo_seed, k, 0, s))
+                for s in seeds]
+        res = run_fleet(jobs, T=T, chunk=chunk, window=window,
+                        early_stop=early_stop, verdict=verdict,
+                        devices=devices)
+        launch_saved[0] += res.launch_slots_saved
+        names = res.verdicts()
+        probe = RateProbe(
+            rate_index=k, call_index=0, lam=k * step,
+            sustainable=all(v == "STABLE" for v in names),
+            verdicts=tuple(names),
+            decided_at=tuple(int(d)
+                             for d in res.column("decided_at_slot")),
+            slots_run=res.n_sims * res.T - res.slots_saved,
+            slots_saved=res.slots_saved)
+        cache[k] = probe
+        probes.append(probe)
+        return probe.sustainable
+
+    # --- bracket on the grid, then validate its verdicts.
+    k_lo = max(int(np.floor(bracket[0] * bound / step)), 0)
+    k_hi = max(int(np.ceil(bracket[1] * bound / step)), k_lo + 1)
+    while k_lo > 0 and not evaluate(k_lo):
+        k_lo //= 2                    # shrink toward a sustainable floor
+    while evaluate(k_hi) and len(probes) < max_calls:
+        k_lo = max(k_lo, k_hi)        # hi was sustainable: push the ceiling
+        k_hi *= 2
+
+    # --- integer bisection: invariant of the starting bracket.
+    n_iters = 0
+    while k_hi - k_lo > 1 and len(probes) < max_calls:
+        k_mid = (k_lo + k_hi) // 2
+        if evaluate(k_mid):
+            k_lo = k_mid
+        else:
+            k_hi = k_mid
+        n_iters += 1
+
+    # Each probe's engine accounting already splits n_sims * T_eff into
+    # (slots_run, slots_saved); summing both sides recovers the full-run
+    # denominator without re-deriving the engine's chunk rounding.
+    full = sum(p.slots_run + p.slots_saved for p in probes)
+    run_slots = sum(p.slots_run for p in probes)
+    return FrontierResult(
+        scenario=scenario, policy=policy, eps_b=eps_b, topo_seed=topo_seed,
+        lam_max=k_lo * step, bound_exact=bound,
+        ratio=k_lo * step / bound, lo=k_lo * step, hi=k_hi * step,
+        n_calls=len(probes), n_iters=n_iters,
+        total_slots=run_slots, full_slots=full,
+        slots_saved=full - run_slots,
+        launch_slots_saved=launch_saved[0],
+        n_step_compiles=_probe_step_compiles(
+            scenario, policy, eps_b, topo_seed, T, chunk, window, vcfg,
+            devices),
+        probes=tuple(probes))
+
+
+def _probe_step_compiles(scenario, policy, eps_b, topo_seed, T, chunk,
+                         window, vcfg: VerdictConfig, devices) -> int:
+    """How many chunk-step programs the search's launches compiled.
+
+    `make_stream_runner`/`make_group_launch` are memoized on exactly the
+    values every probe passed, so this lookup returns the *same* jitted
+    step_fn the bisection used; its jit cache size is the compile count
+    (`TestNoRecompilation` convention)."""
+    cfg = FleetJob(scenario=scenario, policy=policy, eps_b=eps_b,
+                   topo_seed=topo_seed).policy_config()
+    runner = make_stream_runner(cfg, T, chunk=chunk, window=window,
+                                verdict=vcfg)
+    mesh = Mesh(np.array(list(devices or jax.devices())), ("fleet",))
+    _, step_fn, _ = make_group_launch(runner, mesh)
+    try:
+        return int(step_fn._cache_size())
+    except Exception:  # pragma: no cover - private API moved
+        return -1

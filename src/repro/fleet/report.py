@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.core.capacity import capacity_upper_bound
 from repro.core.policies import PolicyConfig
+from repro.core.queues import VERDICT_NAMES
 from .engine import FleetJob, run_fleet
 from .scenarios import get_scenario
 
@@ -108,12 +109,17 @@ def capacity_report(scenario_policies: Dict[str, Sequence[str]],
                     T: int, chunk: int = 1024, window: int | None = None,
                     topo_seed: int = 0, devices=None,
                     eps_b: float = 0.01,
-                    memory_stats: bool = False) -> dict:
+                    memory_stats: bool = False,
+                    early_stop: bool = False) -> dict:
     """Run the sweep and assemble the capacity/efficiency table.
 
     Per-policy rows report both bounds — `bound_exact` (the per-(scenario,
     eps_B) regulated LP) and `bound_approx` (`lam_star/rho0`) — plus
     `bound`/`efficiency` measured against the exact one (DESIGN.md §6).
+    Points carry the streaming verdict and its decision slot
+    (DESIGN.md §8); `early_stop=True` additionally freezes decided sims
+    and stops chunk launches per group (frontier semantics — off by
+    default so efficiency numbers stay full-horizon).
     """
     lam_star_of = {
         scen: exact_lam_star(scen, int(topo_seed), 1.0)
@@ -131,7 +137,7 @@ def capacity_report(scenario_policies: Dict[str, Sequence[str]],
     jobs = sweep_jobs(scenario_policies, rate_fracs, seeds,
                       topo_seed=topo_seed, eps_b=eps_b, exact=True)
     res = run_fleet(jobs, T=T, chunk=chunk, window=window, devices=devices,
-                    memory_stats=memory_stats)
+                    memory_stats=memory_stats, early_stop=early_stop)
 
     table: dict = {
         "T": res.T, "window": res.window,
@@ -169,6 +175,9 @@ def capacity_report(scenario_policies: Dict[str, Sequence[str]],
                     {"offered": float(m["offered"]),
                      "useful_rate": float(m["useful_rate"]),
                      "stable": bool(m["stable"] > 0.5),
+                     "verdict": VERDICT_NAMES[int(m["verdict"])],
+                     "decided_at_slot": int(m["decided_at_slot"]),
+                     "slots_saved": int(m["slots_saved"]),
                      "mean_queue": float(m["mean_queue"]),
                      "max_queue": float(m["max_queue"])}
                     for _, m in rows],
