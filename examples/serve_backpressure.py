@@ -1,26 +1,38 @@
-"""Example: backpressure request dispatch across model replicas (paper eq. 9
-as a serving scheduler) + a real batched decode engine with dummy-slot
-padding (the regulator, eq. 8).
+"""Example: the serving subsystem (DESIGN.md §9) — live query traffic
+through backpressure admission control, scored against the exact LP
+bound — plus the continuous-batching LLM demo engine (dummy-slot padding
+= the paper's regulator made literal, DESIGN.md §2).
 
   PYTHONPATH=src python examples/serve_backpressure.py
 """
 import jax
 import numpy as np
 
-from repro.configs import get_config, reduced
-from repro.models import get_model, split_tree
-from repro.serving import Engine, simulate
+from repro.fleet import policy_bound_exact
+from repro.serving import ServingJob, run_serving
 
-# --- control plane: dispatch policies under a straggling replica ----------
-print("dispatch simulation: 8 replicas, one straggling at 30% speed,"
-      " load 0.85")
-for policy in ("rr", "jsq", "bp"):
-    r = simulate(policy, ticks=2500, load=0.85, seed=3, straggler=2)
-    print(f"  {policy:3s}: p50={r['p50']:6.1f}  p99={r['p99']:7.1f}  "
-          f"residual backlog={r['residual_backlog']:9.0f}")
+# --- control plane: bursty queries vs the admission gate -------------------
+bound = policy_bound_exact("paper_grid", "pi3_reg", 0.05)
+print(f"paper grid, pi3_reg, eps_B=0.05: exact LP bound = {bound:.1f} QPS")
+
+jobs = [ServingJob(trace="bursty", lam=frac * bound, seed=0)
+        for frac in (0.6, 0.95, 1.3)]
+res = run_serving(jobs, T=2048, chunk=256)
+print("markov_onoff bursts at three offered loads:")
+for job, m in zip(jobs, res.metrics):
+    print(f"  lam={job.lam:5.2f} ({job.lam / bound:4.2f}x bound): "
+          f"delivered={m['delivered_qps']:5.2f} QPS "
+          f"shed={m['shed_frac']:4.2f} p99={m['p99_sojourn']:6.0f} slots "
+          f"gate_open={m['gate_open_frac']:4.2f}")
+# 0.6x/0.95x: everything admitted; 1.3x: the gate duty-cycles, shedding
+# the excess while the admitted rate holds at capacity.
 
 # --- data plane: actual batched decode with padding slots ------------------
 print("\nbatched decode engine (qwen2-family reduced config):")
+from repro.configs import get_config, reduced
+from repro.launch.serve import Engine
+from repro.models import get_model, split_tree
+
 cfg = reduced(get_config("qwen2-0.5b"))
 api = get_model(cfg)
 params, _ = split_tree(api.init(key=jax.random.key(0)))

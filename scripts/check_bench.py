@@ -23,6 +23,22 @@ Handles both bench tables by shape:
   against the committed `BENCH_kernels_baseline.json` (the exact-match
   assertions live in the bench itself).
 
+* **serving** tables (`benchmarks/bench_serving.py --out`, detected by a
+  top-level `"serving"` key or forced with `--mode serving`) — fails on:
+
+  1. a nominal-load (0.95 x bound) row below SERVING_MIN_RATIO delivered
+     QPS vs the exact LP bound, shedding above SERVING_MAX_SHED, or p99
+     sojourn above SERVING_P99_MAX (DESIGN.md §9), and
+  2. an overload row that fails to shed >= SERVING_OVERLOAD_MIN_SHED or
+     admits above capacity x SERVING_OVERLOAD_RATE_SLACK, and
+  3. a non-zero xla-vs-pallas parity diff on the serving decision path,
+  4. a >25% per-sim wall-time regression vs the baseline's `serving`
+     section.
+
+`--mode {auto,fleet,kernels,serving}` (default auto: sniff the table
+shape) picks the checker; the baseline for serving mode is the committed
+`BENCH_baseline.json`, whose `"serving"` key holds the reference table.
+
 Peak chunk-step memory is reported as a delta but not gated (XLA temp
 sizing is backend/version dependent).
 
@@ -34,6 +50,8 @@ gates always run).
 Usage:
   python scripts/check_bench.py BENCH_fleet.json BENCH_baseline.json
   python scripts/check_bench.py BENCH_kernels.json BENCH_kernels_baseline.json
+  python scripts/check_bench.py --mode serving BENCH_serving.json \
+      BENCH_baseline.json
 """
 from __future__ import annotations
 
@@ -44,12 +62,12 @@ import pathlib
 import sys
 
 
-def _load_bench_module():
-    """Import benchmarks/bench_fleet.py (the single source of truth for
-    the gate constants — its module top level imports nothing heavy)."""
+def _load_bench_module(name: str = "bench_fleet"):
+    """Import a benchmarks/ module (the single source of truth for the
+    gate constants — their module top levels import nothing heavy)."""
     path = pathlib.Path(__file__).resolve().parent.parent / "benchmarks" \
-        / "bench_fleet.py"
-    spec = importlib.util.spec_from_file_location("bench_fleet", path)
+        / f"{name}.py"
+    spec = importlib.util.spec_from_file_location(name, path)
     mod = importlib.util.module_from_spec(spec)
     spec.loader.exec_module(mod)
     return mod
@@ -96,9 +114,101 @@ def check_kernels(current: dict, baseline: dict) -> list[str]:
     return errors
 
 
-def check(current: dict, baseline: dict) -> list[str]:
-    if "kernels" in current:
+def check_serving(current: dict, baseline: dict) -> list[str]:
+    """Acceptance + regression gates for bench_serving tables.
+
+    Gate constants come from benchmarks/bench_serving.py (single source
+    of truth, asserted there on every bench run); the baseline's
+    `serving` section supplies the timing reference."""
+    sv = _load_bench_module("bench_serving")
+    errors: list[str] = []
+    cur = current.get("serving", current)
+    base = baseline.get("serving", {})
+
+    # --- 1. wall-time regression vs the committed serving baseline
+    if os.environ.get("CHECK_BENCH_SKIP_TIMING", "0") != "1":
+        max_reg = float(os.environ.get("CHECK_BENCH_MAX_REGRESSION", "1.25"))
+        cur_us = current.get("us_per_sim", cur.get("us_per_sim"))
+        base_us = base.get("us_per_sim")
+        if cur_us is None:
+            errors.append("serving table has no us_per_sim field")
+        elif base_us:
+            ratio = cur_us / base_us
+            print(f"check_bench: serving us_per_sim {cur_us:.0f} vs "
+                  f"baseline {base_us:.0f} (x{ratio:.2f}, "
+                  f"limit x{max_reg:.2f})")
+            if ratio > max_reg:
+                errors.append(f"serving us_per_sim regression: "
+                              f"{cur_us:.0f} > {base_us:.0f} * {max_reg:.2f}")
+
+    # --- 2. nominal-load row: delivered/bound floor, shed ceiling, p99
+    bound = cur.get("bound_exact", 0.0)
+    rows = cur.get("rows", {})
+    nom = rows.get("0.95")
+    if nom is None:
+        errors.append("serving table has no 0.95-load row")
+    else:
+        ratio = nom.get("delivered_over_bound", 0.0)
+        shed = nom.get("shed_frac_max", 1.0)
+        p99 = nom.get("p99_sojourn_max", float("inf"))
+        print(f"check_bench: serving 0.95-load ratio={ratio:.3f} "
+              f"(gate >= {sv.SERVING_MIN_RATIO}) shed={shed:.3f} "
+              f"(<= {sv.SERVING_MAX_SHED}) p99={p99:.0f} "
+              f"(<= {sv.SERVING_P99_MAX:.0f})")
+        if ratio < sv.SERVING_MIN_RATIO:
+            errors.append(f"serving 0.95-load delivered/bound {ratio:.3f} "
+                          f"< {sv.SERVING_MIN_RATIO} (bound={bound})")
+        if shed > sv.SERVING_MAX_SHED:
+            errors.append(f"serving 0.95-load shed_frac {shed:.3f} > "
+                          f"{sv.SERVING_MAX_SHED}")
+        if p99 > sv.SERVING_P99_MAX:
+            errors.append(f"serving 0.95-load p99 {p99:.0f} > "
+                          f"{sv.SERVING_P99_MAX:.0f}")
+
+    # --- 3. overload row: the gate must shed, admission stays bounded
+    over = rows.get(f"{sv.SERVING_OVERLOAD_FRAC:g}")
+    if over is None:
+        errors.append(f"serving table has no "
+                      f"{sv.SERVING_OVERLOAD_FRAC:g}x overload row")
+    else:
+        shed = over.get("shed_frac", 0.0)
+        adm = over.get("admitted_rate", float("inf"))
+        cap = bound * sv.SERVING_OVERLOAD_RATE_SLACK
+        print(f"check_bench: serving overload shed={shed:.3f} "
+              f"(gate >= {sv.SERVING_OVERLOAD_MIN_SHED}) "
+              f"admitted={adm:.3f} (<= {cap:.3f})")
+        if shed < sv.SERVING_OVERLOAD_MIN_SHED:
+            errors.append(f"serving overload shed_frac {shed:.3f} < "
+                          f"{sv.SERVING_OVERLOAD_MIN_SHED}")
+        if adm > cap:
+            errors.append(f"serving overload admitted_rate {adm:.3f} > "
+                          f"{cap:.3f}")
+
+    # --- 4. backend parity on the serving decision path: bit-identical
+    parity = cur.get("parity")
+    if parity is None:
+        errors.append("serving table missing parity section")
+    else:
+        diff = parity.get("parity_max_abs_diff")
+        if diff is None:
+            errors.append("serving parity section missing "
+                          "parity_max_abs_diff")
+        elif diff != 0.0:
+            errors.append(f"serving xla/pallas parity broken: "
+                          f"max |diff| = {diff}")
+        else:
+            print("check_bench: serving xla/pallas parity exact (diff 0.0)")
+    return errors
+
+
+def check(current: dict, baseline: dict, mode: str = "auto") -> list[str]:
+    if mode == "auto":
+        mode = ("kernels" if "kernels" in current else
+                "serving" if "serving" in current else "fleet")
+    if mode == "kernels":
         return check_kernels(current, baseline)
+    if mode == "serving":
+        return check_serving(current, baseline)
     errors = []
 
     # --- 1. wall-time regression
@@ -193,14 +303,20 @@ def check(current: dict, baseline: dict) -> list[str]:
 
 
 def main(argv: list[str]) -> int:
-    if len(argv) != 3:
-        print(__doc__, file=sys.stderr)
-        return 2
-    with open(argv[1]) as f:
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="Bench regression gate (see module docstring)")
+    ap.add_argument("current", help="freshly produced bench JSON")
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("--mode", choices=("auto", "fleet", "kernels", "serving"),
+                    default="auto",
+                    help="which checker to run (auto: sniff table shape)")
+    args = ap.parse_args(argv[1:])
+    with open(args.current) as f:
         current = json.load(f)
-    with open(argv[2]) as f:
+    with open(args.baseline) as f:
         baseline = json.load(f)
-    errors = check(current, baseline)
+    errors = check(current, baseline, mode=args.mode)
     for e in errors:
         print(f"check_bench: ERROR: {e}", file=sys.stderr)
     if not errors:

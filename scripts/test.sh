@@ -22,13 +22,21 @@
 #     `pallas`) re-run under JAX_PLATFORMS=cpu interpret mode, plus the
 #     kernel micro-bench gate (BENCH_kernels.json vs the committed
 #     BENCH_kernels_baseline.json, DESIGN.md §7);
+#   - a serving smoke: bursty queries through the admission gate
+#     (DESIGN.md §9) must deliver >= 0.9x the exact LP bound with the
+#     gate open and nothing shed;
 #   - the bench gate: benchmarks/bench_fleet.py --preset smoke emits
 #     BENCH_fleet.json (incl. the xla-vs-pallas backend section and the
 #     frontier lam_max section) and scripts/check_bench.py fails on >25%
 #     us/sim regression vs the committed BENCH_baseline.json, any
 #     efficiency gate breach (DESIGN.md §6), any xla/pallas parity diff,
 #     a frontier ratio outside [0.90, 1.0], or <30% early-stop savings
-#     (DESIGN.md §8).
+#     (DESIGN.md §8);
+#   - the serving bench gate: benchmarks/bench_serving.py emits
+#     BENCH_serving.json + SERVING_stream.jsonl and scripts/check_bench.py
+#     --mode serving gates delivered-QPS/bound, shedding, p99 sojourn,
+#     overload behavior, and serving-path xla/pallas parity against the
+#     committed baseline's "serving" section (DESIGN.md §9).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -88,6 +96,26 @@ print(f"frontier_smoke: lam_max={r.lam_max:.2f} / bound={r.bound_exact:.2f}"
       f"{100 * r.slots_saved_frac:.0f}% slots saved) ok")
 PY2
 
+# serving_smoke: bursty query traffic through the admission gate into the
+# backpressure network (DESIGN.md §9) — at 0.95x the exact LP bound the
+# gate must stay open (no shedding, no flips) and deliver >= 0.9x bound.
+python - <<'PY3'
+from repro.fleet import policy_bound_exact
+from repro.serving import ServingJob, run_serving
+
+bound = policy_bound_exact("paper_grid", "pi3_reg", 0.05)
+jobs = [ServingJob(trace="bursty", lam=0.95 * bound, seed=s)
+        for s in (0, 1)]
+res = run_serving(jobs, T=2048, chunk=256)
+for m in res.metrics:
+    assert m["shed_frac"] == 0.0 and m["gate_flips"] == 0.0, m
+    assert m["delivered_qps"] >= 0.9 * bound, m
+    assert 0.0 < m["p99_sojourn"] <= 512.0, m
+qps = [m["delivered_qps"] for m in res.metrics]
+print(f"serving_smoke: pi3_reg/bursty qps={min(qps):.2f}..{max(qps):.2f} "
+      f"vs bound={bound:.1f} (gate open, 0 shed) ok")
+PY3
+
 # Pallas parity suite, re-run under an explicit CPU platform pin: the
 # fused slot kernels (DESIGN.md §7) must be bit-identical to the XLA
 # oracle in interpret mode — the exact configuration CI runs them in.
@@ -106,4 +134,11 @@ CHECK_BENCH_MAX_REGRESSION="${CHECK_BENCH_MAX_REGRESSION:-2.0}" \
 # backend comparison section), regression-checked against the committed
 # baseline.
 python benchmarks/bench_fleet.py --preset smoke --out BENCH_fleet.json
-python scripts/check_bench.py BENCH_fleet.json BENCH_baseline.json
+python scripts/check_bench.py --mode fleet BENCH_fleet.json BENCH_baseline.json
+
+# Serving bench gate: trace-driven admission-control smoke (DESIGN.md §9)
+# -> BENCH_serving.json + per-chunk stream records, gated against the
+# committed baseline's "serving" section.
+python benchmarks/bench_serving.py --out BENCH_serving.json \
+    --stream-out SERVING_stream.jsonl
+python scripts/check_bench.py --mode serving BENCH_serving.json BENCH_baseline.json

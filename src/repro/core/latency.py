@@ -1,0 +1,102 @@
+"""Streaming sojourn-latency accumulators that ride the scan carry.
+
+The serving subsystem scores *latency*, not just throughput, and it has to
+do so under the fleet engine's O(1)-memory contract: no [T]-shaped arrays,
+no per-query timestamps (queries are fluid — there is no object to stamp).
+The stamps therefore live in the carry as two fixed-size structures:
+
+  * a ring buffer of the cumulative-admitted curve A(s) over the last
+    `horizon` slots, and
+  * a delivered-weighted histogram of sojourn delays.
+
+Under FIFO fluid service the sojourn of flow departing at slot t is the
+horizontal distance between the cumulative curves: the smallest w with
+A(t - w) <= D(t).  With A's recent history in the ring that distance is
+one vectorized comparison, `sum(ring > D(t))` — every ring entry newer
+than the crossing point exceeds D(t) and each contributes one slot of
+delay.  Slots older than the ring report the cap (`horizon`), which makes
+the estimate conservative rather than silently wrong, and slots before
+the run started compare as A = 0 <= D, i.e. they contribute nothing.
+
+Each slot's delivered mass lands in a `horizon/n_bins`-slot-wide histogram
+bin of its delay; quantiles read the histogram's running-sum crossing and
+report the bin's *upper* edge (again conservative).  The delay sum for the
+mean is Kahan-compensated like every other long-horizon counter
+(DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .queues import kahan_add
+
+
+class LatencyStats(NamedTuple):
+    """O(horizon + n_bins) latency state carried through the scan.
+
+    ``ring[s]`` holds the cumulative admitted mass A at the end of slot s
+    (mod `horizon`); ``hist[b]`` the delivered mass whose sojourn fell in
+    bin b, with bin ``n_bins`` collecting everything at or past the cap.
+    """
+
+    ring: jax.Array        # [horizon] float32, cumulative-admitted curve
+    hist: jax.Array        # [n_bins + 1] float32, delivered mass per bin
+    sum_delay: jax.Array   # [] delivered-weighted delay sum (slots * mass)
+    c_delay: jax.Array     # [] Kahan compensation for sum_delay
+
+    @staticmethod
+    def zero(horizon: int, n_bins: int) -> "LatencyStats":
+        return LatencyStats(
+            ring=jnp.zeros((horizon,), jnp.float32),
+            hist=jnp.zeros((n_bins + 1,), jnp.float32),
+            sum_delay=jnp.zeros((), jnp.float32),
+            c_delay=jnp.zeros((), jnp.float32),
+        )
+
+
+def latency_update(lat: LatencyStats, t: jax.Array, cum_admitted: jax.Array,
+                   cum_delivered: jax.Array, delivered_slot: jax.Array, *,
+                   horizon: int, n_bins: int) -> LatencyStats:
+    """One slot of the latency accumulator (post-slot cumulative counters).
+
+    The FIFO virtual sojourn of the mass delivered this slot is the count
+    of recent slots whose admitted curve still exceeds today's delivered
+    curve, capped at `horizon`.  A strict `>` makes an empty system (A == D)
+    report zero delay.
+    """
+    ring = lat.ring.at[t % horizon].set(cum_admitted)
+    delay = jnp.sum(ring > cum_delivered).astype(jnp.float32)
+    bin_w = max(horizon // n_bins, 1)
+    b = jnp.minimum(delay / bin_w, n_bins).astype(jnp.int32)
+    s, c = kahan_add(lat.sum_delay, lat.c_delay, delay * delivered_slot)
+    return LatencyStats(ring=ring, hist=lat.hist.at[b].add(delivered_slot),
+                        sum_delay=s, c_delay=c)
+
+
+def latency_quantiles(hist: jax.Array, qs: Sequence[float], *,
+                      horizon: int, n_bins: int) -> jax.Array:
+    """Histogram quantiles in slots, as bin upper edges (conservative).
+
+    Works on any delivered-weighted histogram with the `LatencyStats.hist`
+    layout — the full-run accumulator or a per-window difference of two
+    snapshots.  An all-zero histogram (nothing delivered) reports 0.
+    """
+    hist = hist.astype(jnp.float32)
+    total = hist.sum(axis=-1, keepdims=True)
+    cum = jnp.cumsum(hist, axis=-1)
+    bin_w = max(horizon // n_bins, 1)
+    out = []
+    for q in qs:
+        b = jnp.sum(cum < q * total, axis=-1)          # first bin crossing q
+        edge = jnp.minimum((b + 1) * bin_w, horizon).astype(jnp.float32)
+        out.append(jnp.where(total[..., 0] > 0, edge, 0.0))
+    return jnp.stack(out, axis=-1)
+
+
+def latency_mean(lat: LatencyStats) -> jax.Array:
+    """Delivered-weighted mean sojourn in slots (0 if nothing delivered)."""
+    total = lat.hist.sum()
+    return jnp.where(total > 0, lat.sum_delay / jnp.maximum(total, 1e-9), 0.0)

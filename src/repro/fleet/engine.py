@@ -410,21 +410,22 @@ class FleetResult:
 
 
 @functools.lru_cache(maxsize=64)
-def make_group_launch(runner, mesh: Mesh):
+def make_group_launch(runner, mesh: Mesh, n_step_args: int = 7):
     """Jit the three per-group programs of the chunked fleet launch.
 
     Returns `(init_fn, step_fn, fin_fn)`, each a
     `jax.jit(shard_map(vmap(...)))` over the `"fleet"` mesh axis.  `step_fn`
-    donates its carry argument (`donate_argnums=6`): across the Python-level
-    chunk loop the [B, N, 3, NC] queue state is updated in place instead of
-    being double-buffered — the memory audit that matters once B·N·NC grows
-    past cache sizes.  Donation is asserted by
-    `tests/test_fleet.py::TestDonation`.
+    donates its carry argument — the *last* of the `n_step_args` chunk-step
+    arguments (7 for the fleet runner, 6 for the serving runner, which has
+    no arrival-model switch code): across the Python-level chunk loop the
+    [B, N, 3, NC] queue state is updated in place instead of being
+    double-buffered — the memory audit that matters once B·N·NC grows past
+    cache sizes.  Donation is asserted by `tests/test_fleet.py::TestDonation`.
 
-    Memoized on `(runner, mesh)` (runners are themselves memoized, Mesh is
-    hashable): two sweeps over the same policy group reuse the compiled
-    programs instead of re-tracing, and within one sweep the chunk loop is
-    guaranteed a single compilation
+    Memoized on `(runner, mesh, n_step_args)` (runners are themselves
+    memoized, Mesh is hashable): two sweeps over the same policy group
+    reuse the compiled programs instead of re-tracing, and within one sweep
+    the chunk loop is guaranteed a single compilation
     (`tests/test_fleet.py::TestNoRecompilation`)."""
     spec = P("fleet")
 
@@ -433,7 +434,8 @@ def make_group_launch(runner, mesh: Mesh):
                          out_specs=spec,
                          check_rep=False)  # scan carries: no replication rule
     init_fn = jax.jit(_sharded(runner.init_carry, 1))
-    step_fn = jax.jit(_sharded(runner.chunk_step, 7), donate_argnums=(6,))
+    step_fn = jax.jit(_sharded(runner.chunk_step, n_step_args),
+                      donate_argnums=(n_step_args - 1,))
     fin_fn = jax.jit(_sharded(runner.finalize, 3))
     return init_fn, step_fn, fin_fn
 

@@ -217,6 +217,22 @@ def _ev_ge_full(sp, t: jax.Array, key: jax.Array, mod: ModState):
     return link_scale, comp_up, mod
 
 
+# Scripted comp-node outage: one deterministic Gilbert–Elliott Down run
+# with its endpoints pinned, so tests can assert shed/recover *timing*
+# (the serving fault-injection test, tests/test_serving.py).  Node
+# `OUTAGE_NODE` is Down for slots [OUTAGE_LO, OUTAGE_HI).
+OUTAGE_NODE = 0
+OUTAGE_LO = 1024
+OUTAGE_HI = 1536
+
+
+def _ev_outage_window(sp, t: jax.Array, key: jax.Array, mod: ModState):
+    down = (t >= OUTAGE_LO) & (t < OUTAGE_HI)
+    up = jnp.ones((sp.n_comp,), jnp.float32).at[OUTAGE_NODE].set(
+        jnp.where(down, 0.0, 1.0))
+    return _ones(sp)[0], up, mod
+
+
 EVENT_MODELS: Dict[str, Callable] = {
     "static": _ev_static,
     "fading": _ev_fading,
@@ -225,6 +241,7 @@ EVENT_MODELS: Dict[str, Callable] = {
     "gilbert_elliott": _ev_gilbert_elliott,
     "ge_comp": _ev_ge_comp,
     "ge_full": _ev_ge_full,
+    "outage_window": _ev_outage_window,   # appended: switch codes are frozen
 }
 EVENT_MODEL_ORDER: Tuple[str, ...] = tuple(EVENT_MODELS)
 
@@ -473,3 +490,8 @@ register_scenario(Scenario(
     "ge_full_grid", lambda seed: paper_grid_problem(), events="ge_full",
     description="Paper grid under combined Markov link fading AND "
                 "comp-node failures."))
+register_scenario(Scenario(
+    "outage_grid", lambda seed: paper_grid_problem(), events="outage_window",
+    description="Paper grid with a scripted comp-node outage in slots "
+                "[OUTAGE_LO, OUTAGE_HI) — deterministic fault-injection "
+                "for the serving shed/recover test."))

@@ -1,5 +1,30 @@
-from .scheduler import Replica, Request, Scheduler, simulate
-from .engine import Engine, ServeRequest
+"""Serving: trace-driven BP admission control on the fleet substrate.
 
-__all__ = ["Replica", "Request", "Scheduler", "simulate", "Engine",
-           "ServeRequest"]
+Public API (DESIGN.md §9):
+  trace:      QueryClass, TraceSpec, TraceState, TRACES, register_trace,
+              get_trace, list_traces, draw_arrivals
+  admission:  AdmissionConfig, AdmissionState, DEFAULT_ADMISSION
+  scheduler:  make_serving_runner
+  engine:     ServingJob, ServingResult, run_serving
+  report:     serving_report, jsonl_line, write_stream_jsonl
+
+The LLM continuous-batching demo engine formerly here lives in
+`repro.launch.serve` (it serves models, not the paper's network).
+"""
+from .trace import (QueryClass, TRACES, TraceSpec, TraceState, draw_arrivals,
+                    get_trace, list_traces, register_trace)
+from .admission import (AdmissionConfig, AdmissionState, DEFAULT_ADMISSION,
+                        admission_admit, admission_update)
+from .scheduler import LAT_BINS, LAT_HORIZON, make_serving_runner
+from .engine import ServingJob, ServingResult, run_serving
+from .report import jsonl_line, serving_report, write_stream_jsonl
+
+__all__ = [
+    "QueryClass", "TraceSpec", "TraceState", "TRACES", "register_trace",
+    "get_trace", "list_traces", "draw_arrivals",
+    "AdmissionConfig", "AdmissionState", "DEFAULT_ADMISSION",
+    "admission_admit", "admission_update",
+    "make_serving_runner", "LAT_HORIZON", "LAT_BINS",
+    "ServingJob", "ServingResult", "run_serving",
+    "serving_report", "jsonl_line", "write_stream_jsonl",
+]

@@ -1,0 +1,176 @@
+"""Admission control: shed queries on drift toward instability, re-admit
+on recovery.
+
+The gate thresholds on the same Lyapunov-drift evidence the PR-5 streaming
+verdict latches on (`DriftStats`, DESIGN.md §8), but where the verdict is a
+one-way latch (decide once, freeze), admission must be *reversible*: an
+overloaded network sheds, a recovered one re-admits.  So the gate consumes
+the `DriftStats` leaf that is itself reversible — ``unstable_run``, the
+consecutive-window streak of drift evidence that latches UNSTABLE once it
+reaches ``k_unstable`` — as corroborating shed evidence ("the drift slope
+is latching toward UNSTABLE"), alongside its own windowed, re-anchored
+statistics: backlog growth per slot since the last admission window and
+the admitted-vs-delivered throughput gap, both scaled by max(lam, 1) like
+the verdict tolerances.  The terminal ``verdict`` latch deliberately does
+NOT hold the gate shut: once shedding starts, the network's true offered
+rate is the *admitted* rate, not `lam`, so the open-loop verdict (which
+keeps scoring `lam`) may latch UNSTABLE during an outage and stay latched
+forever — correct as a statement about the open-loop rate, useless as a
+re-admission signal.  Recovery is judged by the gate's own windowed
+evidence (drain slope), which the latch cannot veto.
+
+Overload evidence is a *conjunction*, exactly like the verdict's two
+tests: the backlog must grow (windowed drift slope >= `shed_tol` x
+max(lam, 1)) AND delivery must fall behind admission (windowed
+admitted-minus-delivered gap >= `gap_tol` x max(lam, 1)).  Either test
+alone false-trips under bursty traffic — backlog wanders without losing
+throughput — but a genuinely overloaded network fails both at once.
+
+Hysteresis by construction: the gate only moves at admission-window
+boundaries after a burn-in, needs `k_shed` consecutive overloaded windows
+to close and `k_readmit` consecutive recovered windows to open, and a
+flip resets the opposing evidence run.  Two consecutive flips are
+therefore always at least `min(k_shed, k_readmit)` windows apart — the
+no-flip-flop property `tests/test_serving.py` asserts.  The shed/readmit
+tolerances leave a dead band (`readmit_tol < shed_tol`) so slope noise
+near the threshold cannot oscillate the gate.
+
+Shedding is class-uniform (one multiplicative gate for every query class):
+graceful degradation that cannot starve any class — fairness across the
+mixture is inherited rather than tuned.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.queues import kahan_add
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionConfig:
+    """Gate parameters.  Frozen/hashable: keys the serving-runner memo.
+
+    ``window <= 0`` resolves to the runner's chunk length, aligning gate
+    decisions with the boundaries the engine's Python loop can observe —
+    the same convention as `VerdictConfig.window`.
+    """
+
+    window: int = 0           # slots between gate decisions
+    burn_in: int = 0          # slots before evidence counts; <= 0 -> 2 windows
+                              # (skips the queue fill-up transient)
+    shed_tol: float = 0.10    # windowed drift slope that reads as overload,
+                              # x max(lam, 1) (5x the verdict drift_tol: the
+                              # gate reacts to sharper growth than the latch)
+    gap_tol: float = 0.05     # windowed admitted-vs-delivered gap that
+                              # corroborates overload, x max(lam, 1)
+    readmit_tol: float = 0.02  # slope at or below this reads as recovered
+    k_shed: int = 2           # consecutive overloaded windows to close
+    k_readmit: int = 2        # consecutive recovered windows to reopen
+
+
+DEFAULT_ADMISSION = AdmissionConfig()
+
+
+class AdmissionState(NamedTuple):
+    """Per-sim gate state + per-class admitted/shed counters (all O(K)).
+
+    The counters are Kahan-compensated like the delivery counters
+    (DESIGN.md §4) — admitted mass is the latency accumulator's A-curve,
+    so it must stay exact over long horizons.
+    """
+
+    gate: jax.Array        # [] float32, 1.0 = admitting, 0.0 = shedding
+    q_mark: jax.Array      # [] backlog at the last admission boundary
+    a_mark: jax.Array      # [] admitted_total at the last boundary
+    d_mark: jax.Array      # [] delivered_useful at the last boundary
+    over_run: jax.Array    # [] int32: consecutive overloaded windows
+    under_run: jax.Array   # [] int32: consecutive recovered windows
+    flips: jax.Array      # [] int32: gate transitions so far
+    last_flip: jax.Array   # [] int32: slot of the last transition (-1: none)
+    last_slope: jax.Array  # [] windowed drift slope at the last boundary
+    admitted: jax.Array    # [K] per-class admitted mass
+    admitted_c: jax.Array  # [K] Kahan compensation
+    shed: jax.Array        # [K] per-class shed mass
+    shed_c: jax.Array      # [K]
+    gate_slots: jax.Array  # [] slots spent with the gate open
+
+    @staticmethod
+    def zero(n_classes: int) -> "AdmissionState":
+        z = jnp.zeros((), jnp.float32)
+        zi = jnp.zeros((), jnp.int32)
+        zk = jnp.zeros((n_classes,), jnp.float32)
+        return AdmissionState(gate=jnp.ones((), jnp.float32), q_mark=z,
+                              a_mark=z, d_mark=z,
+                              over_run=zi, under_run=zi, flips=zi,
+                              last_flip=jnp.full((), -1, jnp.int32),
+                              last_slope=z, admitted=zk, admitted_c=zk,
+                              shed=zk, shed_c=zk, gate_slots=z)
+
+
+def admission_admit(adm: AdmissionState, class_arrivals: jax.Array):
+    """Apply the current gate to one slot's per-class arrivals.
+
+    Returns ``(state', admitted_total)`` — the scalar admitted mass is what
+    actually enters the network this slot.
+    """
+    admitted_k = class_arrivals * adm.gate
+    shed_k = class_arrivals - admitted_k
+    a, ac = kahan_add(adm.admitted, adm.admitted_c, admitted_k)
+    s, sc = kahan_add(adm.shed, adm.shed_c, shed_k)
+    adm2 = adm._replace(admitted=a, admitted_c=ac, shed=s, shed_c=sc,
+                        gate_slots=adm.gate_slots + adm.gate)
+    return adm2, admitted_k.sum()
+
+
+def admission_update(cfg: AdmissionConfig, adm: AdmissionState, t: jax.Array,
+                     total_q: jax.Array, delivered_useful: jax.Array,
+                     lam: jax.Array, drift, *, window: int,
+                     burn_in: int) -> AdmissionState:
+    """One slot of the gate machinery; the gate only moves at boundaries.
+
+    Called with the post-slot backlog, cumulative useful deliveries, and
+    the sim's post-slot `DriftStats` (its ``unstable_run`` streak is shed
+    evidence).  `window`/`burn_in` are the resolved admission window and
+    burn-in (the config's, or chunk-derived defaults).
+    """
+    boundary = (t + 1) % window == 0
+    counted = boundary & (t + 1 >= burn_in)
+    scale = jnp.maximum(lam, 1.0)
+    admitted_total = adm.admitted.sum()
+    slope = (total_q - adm.q_mark) / window
+    gap = (admitted_total - adm.a_mark
+           - (delivered_useful - adm.d_mark)) / window
+    # The verdict's anchored evidence streak corroborates the FIRST close
+    # only (last_flip < 0): while no shedding has happened the anchored
+    # statistics measure the true offered rate, but after any intervention
+    # they keep scoring `lam` against a history the gate already altered —
+    # they never forget the outage deficit, so they must not re-trip the
+    # gate after recovery.  Post-flip, the windowed conjunction governs.
+    over_ev = ((slope >= cfg.shed_tol * scale)
+               & (gap >= cfg.gap_tol * scale)) | \
+        ((drift.unstable_run >= 1) & (adm.last_flip < 0))
+    under_ev = slope <= cfg.readmit_tol * scale
+    over = jnp.where(counted, jnp.where(over_ev, adm.over_run + 1, 0),
+                     adm.over_run)
+    under = jnp.where(counted, jnp.where(under_ev, adm.under_run + 1, 0),
+                      adm.under_run)
+    close = counted & (adm.gate > 0.5) & (over >= cfg.k_shed)
+    open_ = counted & (adm.gate <= 0.5) & (under >= cfg.k_readmit)
+    flip = close | open_
+    return adm._replace(
+        gate=jnp.where(close, 0.0, jnp.where(open_, 1.0, adm.gate)),
+        q_mark=jnp.where(boundary, total_q, adm.q_mark),
+        a_mark=jnp.where(boundary, admitted_total, adm.a_mark),
+        d_mark=jnp.where(boundary, delivered_useful, adm.d_mark),
+        # A flip restarts the opposing evidence run from scratch — the
+        # hysteresis that keeps consecutive flips >= k windows apart.
+        over_run=jnp.where(open_, 0, over),
+        under_run=jnp.where(close, 0, under),
+        flips=adm.flips + flip.astype(jnp.int32),
+        last_flip=jnp.where(flip, (t + 1).astype(jnp.int32), adm.last_flip),
+        last_slope=jnp.where(boundary, slope, adm.last_slope),
+    )

@@ -1,104 +1,235 @@
-"""Batched serving engine: continuous batching over fixed decode slots with
-dummy-slot padding (the paper's regulator made literal — XLA needs static
-shapes, so empty slots run as dummy packets and are ignored on output).
+"""Serving engine: batched trace-driven runs on the fleet substrate.
 
-The engine drives any arch through the uniform ModelAPI: submit prompts,
-`step()` prefills newly admitted requests (one at a time, cache-filling
-decode of the prompt) and decodes one token for every active slot.
+`run_serving` is the serving twin of `fleet.run_fleet`: jobs are grouped
+by (semantic policy key, trace) — the axes that change Python-level
+control flow — padded to the device mesh, and driven as a Python loop of
+`jit(shard_map(vmap(chunk_step)))` launches with the carry donated between
+launches (`fleet.make_group_launch` with ``n_step_args=6``).  The
+scenario's *event* model (capacity perturbations) is per-job traced data
+exactly as in the fleet; the scenario's arrival model is superseded by the
+job's `TraceSpec` (live query traffic is what serving is about).
+
+Between chunk launches the engine reads back a small probe of the carry
+(cumulative delivered/admitted/shed, gate, verdict, the latency histogram)
+and differences consecutive probes into *windowed* per-chunk records —
+delivered QPS, shed fraction, p99 sojourn, verdict counts, each a median
+across the group's sims.  With ``stream=True`` these land in
+`ServingResult.stream_records`, one dict per chunk boundary, ready to be
+written as JSONL (`serving.report.write_stream_jsonl`) — the seed of the
+streaming-observability path (ROADMAP).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+import functools
+from typing import Callable, Dict, List, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.models import get_model
+from repro.core.graph import ComputeProblem
+from repro.core.policies import PolicyConfig
+from repro.core.queues import VERDICT_NAMES
+from repro.fleet.batching import PadDims, pad_problem
+from repro.fleet.engine import (VerdictConfig, _policy_group_key,
+                                make_group_launch)
+from repro.fleet.scenarios import event_code, get_scenario
+from .admission import AdmissionConfig
+from .scheduler import make_serving_runner
+from .trace import get_trace
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingJob:
+    """One serving run: a scenario instance facing a live query trace."""
+
+    scenario: str = "paper_grid"
+    policy: str = "pi3_reg"
+    trace: str = "bursty"
+    lam: float = 1.0              # long-run offered QPS across all classes
+    seed: int = 0
+    topo_seed: int = 0
+    eps_b: float = 0.05
+    pairing: str = "fifo"
+    threshold: float = 0.0
+    fixed_node: int = 0
+    backend: str = "xla"          # slot-decision backend: "xla" | "pallas"
+    interpret: bool = True
+
+    def policy_config(self) -> PolicyConfig:
+        return PolicyConfig(
+            name=self.policy, eps_b=self.eps_b, pairing=self.pairing,
+            threshold=self.threshold, fixed_node=self.fixed_node,
+            wireless=get_scenario(self.scenario).wireless,
+            backend=self.backend, interpret=self.interpret)
 
 
 @dataclasses.dataclass
-class ServeRequest:
-    rid: int
-    prompt: List[int]
-    max_new: int
-    out: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
+class ServingResult:
+    jobs: List[ServingJob]
+    metrics: List[Dict[str, float]]   # one dict per job, same order;
+                                      # per-class leaves are lists of floats
+    n_programs: int
+    n_sims: int
+    dims: PadDims
+    T: int
+    window: int
+    stream_records: List[dict] = dataclasses.field(default_factory=list)
+
+    def column(self, name: str) -> np.ndarray:
+        return np.array([m[name] for m in self.metrics])
+
+    def verdicts(self) -> List[str]:
+        return [VERDICT_NAMES[int(m["verdict"])] for m in self.metrics]
 
 
-class Engine:
-    def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 256,
-                 temperature: float = 0.0, seed: int = 0):
-        self.cfg = cfg
-        self.api = get_model(cfg)
-        self.params = params
-        self.slots = slots
-        self.max_len = max_len
-        self.temperature = temperature
-        self.key = jax.random.key(seed)
-        self.caches = self.api.init_decode(slots, max_len, jnp.float32)
-        self.router_H = self.api.init_state().router_H
-        self.slot_req: List[Optional[ServeRequest]] = [None] * slots
-        self.pending: List[ServeRequest] = []
-        self.finished: Dict[int, ServeRequest] = {}
-        self._last_tok = np.zeros((slots,), np.int32)
+def _group_key(job: ServingJob):
+    """Program-forking axes: the fleet's semantic policy key + the trace
+    (the class mixture is unrolled Python-level structure in the slot)."""
+    return (_policy_group_key(job), job.trace)
 
-        def step_fn(params, caches, tokens, H):
-            return self.api.decode_step(params, caches, {"tokens": tokens},
-                                        activ_dtype=jnp.float32, router_H=H)
-        self._step = jax.jit(step_fn)
 
-    # ------------------------------------------------------------------
+@functools.lru_cache(maxsize=64)
+def _probe_launch(runner, mesh: Mesh):
+    """Jit the between-chunk probe readout (no donation — read-only)."""
+    spec = P("fleet")
+    return jax.jit(shard_map(jax.vmap(runner.probe), mesh=mesh,
+                             in_specs=(spec,), out_specs=spec,
+                             check_rep=False))
 
-    def submit(self, prompt: List[int], max_new: int = 16) -> int:
-        rid = len(self.finished) + len(self.pending) + sum(
-            r is not None for r in self.slot_req)
-        self.pending.append(ServeRequest(rid, list(prompt), max_new))
-        return rid
 
-    def _admit(self):
-        for s in range(self.slots):
-            if self.slot_req[s] is None and self.pending:
-                req = self.pending.pop(0)
-                self.slot_req[s] = req
-                # prefill by decoding the prompt into this slot's cache:
-                # tokens of OTHER slots are dummy packets (last token echo).
-                for tok in req.prompt[:-1]:
-                    toks = self._last_tok.copy()
-                    toks[s] = tok
-                    _, self.caches = self._step(self.params, self.caches,
-                                                jnp.asarray(toks),
-                                                self.router_H)
-                    self._last_tok = np.asarray(toks)
-                self._last_tok[s] = req.prompt[-1]
+def _hist_quantile(hist: np.ndarray, q: float, horizon: int,
+                   n_bins: int) -> np.ndarray:
+    """Host-side `core.latency.latency_quantiles` on [B, NB+1] numpy data."""
+    total = hist.sum(axis=-1, keepdims=True)
+    cum = np.cumsum(hist, axis=-1)
+    bin_w = max(horizon // n_bins, 1)
+    b = np.sum(cum < q * total, axis=-1)
+    edge = np.minimum((b + 1) * bin_w, horizon).astype(np.float64)
+    return np.where(total[..., 0] > 0, edge, 0.0)
 
-    def step(self) -> int:
-        """One decode tick over all slots; returns #active real slots."""
-        self._admit()
-        active = [s for s in range(self.slots) if self.slot_req[s] is not None]
-        logits, self.caches = self._step(self.params, self.caches,
-                                         jnp.asarray(self._last_tok),
-                                         self.router_H)
-        if self.temperature > 0:
-            self.key, sub = jax.random.split(self.key)
-            nxt = jax.random.categorical(sub, logits / self.temperature, -1)
-        else:
-            nxt = jnp.argmax(logits, -1)
-        nxt = np.asarray(nxt, np.int32)
-        for s in active:
-            req = self.slot_req[s]
-            req.out.append(int(nxt[s]))
-            self._last_tok[s] = nxt[s]
-            if len(req.out) >= req.max_new:
-                req.done = True
-                self.finished[req.rid] = req
-                self.slot_req[s] = None
-        return len(active)
 
-    def run_until_done(self, max_ticks: int = 10_000) -> Dict[int, ServeRequest]:
-        for _ in range(max_ticks):
-            if not self.pending and all(r is None for r in self.slot_req):
-                break
-            self.step()
-        return self.finished
+def _stream_record(group: int, chunk_idx: int, runner, probe: dict,
+                   prev: dict | None, n_real: int) -> dict:
+    """Difference two consecutive probes into one windowed JSONL record.
+
+    Medians are across the group's *real* sims (mesh-padding replicas are
+    sliced off); all values rounded so records diff cleanly in CI.
+    """
+    def delta(name):
+        cur = probe[name][:n_real].astype(np.float64)
+        if prev is None:
+            return cur
+        return cur - prev[name][:n_real].astype(np.float64)
+
+    ddlv = delta("delivered_useful")
+    dadm = delta("admitted_total")
+    dshed = delta("shed_total")
+    doff = np.maximum(dadm + dshed, 1e-9)
+    dhist = delta("hist")
+    p99 = _hist_quantile(dhist, 0.99, runner.lat_horizon, runner.lat_bins)
+    verdict = probe["verdict"][:n_real].astype(int)
+    def r4(x):
+        return round(float(x), 4)
+
+    return {
+        "group": group,
+        "chunk": chunk_idx,
+        "t": int(probe["t"][:n_real].max()),
+        "n_sims": n_real,
+        "qps_med": r4(np.median(ddlv) / runner.chunk),
+        "admitted_qps_med": r4(np.median(dadm) / runner.chunk),
+        "shed_frac_med": r4(np.median(dshed / doff)),
+        "p99_med": r4(np.median(p99)),
+        "gate_open_frac": r4(np.mean(probe["gate"][:n_real])),
+        "gate_flips": int(probe["gate_flips"][:n_real].sum()),
+        "verdicts": {VERDICT_NAMES[v]: int((verdict == v).sum())
+                     for v in sorted(set(verdict.tolist()))},
+    }
+
+
+def run_serving(jobs: Sequence[ServingJob], T: int, chunk: int = 512,
+                window: int | None = None, devices=None,
+                dims: PadDims | None = None,
+                verdict: VerdictConfig | None = None,
+                admission: AdmissionConfig | None = None,
+                stream: bool = False,
+                stream_log: Callable[[dict], None] | None = None
+                ) -> ServingResult:
+    """Run every serving job, one compiled program set per (policy, trace)
+    group, with per-chunk streaming records when ``stream`` is on.
+
+    ``stream_log`` (implies ``stream``) is called once per record as it is
+    produced — wire it to `serving.report.jsonl_line` for live output.
+    """
+    jobs = list(jobs)
+    stream = stream or stream_log is not None
+    devices = list(devices or jax.devices())
+    ndev = len(devices)
+    mesh = Mesh(np.array(devices), ("fleet",))
+
+    problem_of: Dict[tuple, ComputeProblem] = {}
+    for job in jobs:
+        k = (job.scenario, job.topo_seed)
+        if k not in problem_of:
+            problem_of[k] = get_scenario(job.scenario).build(job.topo_seed)
+    dims = dims or PadDims.of(list(problem_of.values()))
+    padded_of = {k: pad_problem(p, dims) for k, p in problem_of.items()}
+
+    groups: Dict[tuple, List[int]] = {}
+    for i, job in enumerate(jobs):
+        groups.setdefault(_group_key(job), []).append(i)
+
+    metrics: List[Dict[str, float] | None] = [None] * len(jobs)
+    records: List[dict] = []
+    eff_T = eff_win = 0
+    for g, (gkey, idxs) in enumerate(groups.items()):
+        job0 = jobs[idxs[0]]
+        cfg = job0.policy_config()
+        runner = make_serving_runner(cfg, get_trace(job0.trace), T,
+                                     chunk=chunk, window=window,
+                                     verdict=verdict, admission=admission)
+        eff_T, eff_win = runner.T, runner.window
+
+        B = len(idxs)
+        Bp = -(-B // ndev) * ndev
+        padded_idxs = idxs + [idxs[-1]] * (Bp - B)
+        pp = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs),
+            *[padded_of[(jobs[i].scenario, jobs[i].topo_seed)]
+              for i in padded_idxs])
+        lam = jnp.array([jobs[i].lam for i in padded_idxs], jnp.float32)
+        eps = jnp.array([jobs[i].eps_b for i in padded_idxs], jnp.float32)
+        ek = jnp.array([event_code(get_scenario(jobs[i].scenario).events)
+                        for i in padded_idxs], jnp.int32)
+        keys = jax.vmap(jax.random.PRNGKey)(
+            jnp.array([jobs[i].seed for i in padded_idxs], jnp.int32))
+
+        init_fn, step_fn, fin_fn = make_group_launch(runner, mesh,
+                                                     n_step_args=6)
+        probe_fn = _probe_launch(runner, mesh) if stream else None
+        carry = init_fn(pp)
+        prev = None
+        for ci in range(runner.n_chunks):
+            carry = step_fn(pp, lam, eps, ek, keys, carry)
+            if probe_fn is not None:
+                p = {k: np.asarray(v)
+                     for k, v in jax.device_get(probe_fn(carry)).items()}
+                rec = _stream_record(g, ci, runner, p, prev, B)
+                records.append(rec)
+                if stream_log is not None:
+                    stream_log(rec)
+                prev = p
+        out = jax.device_get(fin_fn(lam, eps, carry))
+        for j, i in enumerate(idxs):
+            metrics[i] = {
+                k: (float(v[j]) if np.ndim(v[j]) == 0
+                    else np.asarray(v[j]).astype(float).tolist())
+                for k, v in out.items()}
+
+    return ServingResult(jobs=jobs, metrics=metrics, n_programs=len(groups),
+                         n_sims=len(jobs), dims=dims, T=eff_T, window=eff_win,
+                         stream_records=records)

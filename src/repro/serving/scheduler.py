@@ -1,138 +1,236 @@
-"""Backpressure serving scheduler — the paper's π₃ mapped onto multi-replica
-LLM inference (DESIGN.md §2).
+"""The serving scheduler: trace -> admission -> bp_slot -> latency scoring.
 
-Replica r = computation node with capacity C_r tokens/tick.  An incoming
-request (prompt of p tokens, expected output of g tokens) is the "query";
-its pending prefill work is the raw queue X_r, its pending decode work the
-processed queue D_r, and H_r is the virtual admission queue (eq. 10):
+`make_serving_runner` is the serving twin of `fleet.make_stream_runner`:
+it compiles one slot program per (policy, trace, admission, shapes) and
+exposes the same chunked surface the fleet engine drives with a donated
+carry (`init_carry` / `chunk_step` / `finalize`), so serving runs ride
+`jit(shard_map(vmap(chunk_step)))` unchanged (`fleet.make_group_launch`
+with ``n_step_args=6``).
 
-    dispatch:  r* = argmin_r [ (1+eps_B) * D_r + X_r + H_r ]      (eq. 9)
-    per tick:  H_r <- [H_r + admitted_work_r - C_r]^+             (eq. 10)
+One slot of serving (DESIGN.md §9):
 
-Replicas are fluid FIFO single-servers (work in token units, service =
-speed * C_r per tick) — completion times are exact for FIFO.  Baselines:
-round-robin and join-shortest-queue (by active request count).  Replicas
-may be heterogeneous and may straggle, the regimes where backlog-aware
-dispatch wins.
+  1. the trace draws per-class query arrivals (`serving.trace`),
+  2. the admission gate sheds or admits them uniformly
+     (`serving.admission`),
+  3. the event model perturbs capacities (shared `fleet.scenarios` event
+     chains in `ModState`),
+  4. `slot_step` makes the routing + load-balance + regulator decision —
+     the PR-4 `bp_slot` kernel family when ``cfg.backend == "pallas"``,
+     bit-identical XLA otherwise (DESIGN.md §7),
+  5. the latency accumulator stamps this slot's admitted mass into the
+     A-curve ring and bins the delivered mass by FIFO sojourn
+     (`core.latency`),
+  6. the streaming stats + drift verdict update exactly as in the fleet
+     runner, and the admission gate re-evaluates at window boundaries.
+
+The arrival model is *not* a switch code here — the trace mixture is
+Python-level structure (classes unrolled in the slot body), which is why
+the runner is memoized on the `TraceSpec`.  Event models stay `lax.switch`
+codes so heterogeneous scenarios share programs, as in the fleet.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import List, Optional
+import functools
+from typing import Dict
 
-import numpy as np
+import jax
+import jax.numpy as jnp
 
+from repro.core.latency import (LatencyStats, latency_mean, latency_quantiles,
+                                latency_update)
+from repro.core.policies import PolicyConfig, slot_step
+from repro.core.queues import (DriftStats, VERDICT_UNDECIDED,
+                               drift_verdict_update, init_state, kahan_add)
+from repro.fleet.batching import PaddedProblem
+from repro.fleet.engine import (DEFAULT_VERDICT, StreamStats, VerdictConfig)
+from repro.fleet.scenarios import EVENT_MODELS, EVENT_MODEL_ORDER, ModState
+from .admission import (AdmissionConfig, AdmissionState, DEFAULT_ADMISSION,
+                        admission_admit, admission_update)
+from .trace import TraceSpec, TraceState, draw_arrivals
 
-@dataclasses.dataclass
-class Request:
-    rid: int
-    arrival: int                  # tick index
-    prompt: int                   # prefill tokens
-    gen: int                      # decode tokens (work-weighted)
-    replica: int = -1
-    done_at: Optional[int] = None
-
-    @property
-    def work(self) -> float:
-        return float(self.prompt + 4.0 * self.gen)   # decode ~4x cost/token
-
-
-@dataclasses.dataclass
-class Replica:
-    cap: float                    # token-work units / tick
-    speed: float = 1.0            # straggler multiplier (<1 = slow)
-
-    def __post_init__(self):
-        self.served = 0.0         # cumulative work served
-        self.enqueued = 0.0       # cumulative work admitted
-        self.X = 0.0              # pending prefill work
-        self.D = 0.0              # pending decode work
-        self.H = 0.0              # admission virtual queue
-        self.admitted_tick = 0.0
-        self.fifo: List[tuple] = []   # (finish_work_mark, request)
-
-    def backlog(self, eps_b: float) -> float:
-        return (1.0 + eps_b) * self.D + self.X + self.H
+# Latency-stamp defaults: a 1024-slot A-curve ring binned 8 slots wide.
+# The ring cap must exceed the steady-state sojourn at the gated operating
+# point (~p99 < 1024 slots on the paper grid at 0.95 load) or quantiles
+# saturate at the cap — conservative, but uninformative.
+LAT_HORIZON = 1024
+LAT_BINS = 128
 
 
-class Scheduler:
-    def __init__(self, replicas: List[Replica], policy: str = "bp",
-                 eps_b: float = 0.01):
-        self.replicas = replicas
-        self.policy = policy
-        self.eps_b = eps_b
-        self._rr = 0
+def make_serving_runner(cfg: PolicyConfig, trace: TraceSpec, T: int,
+                        chunk: int = 512,
+                        window: int | None = None,
+                        verdict: VerdictConfig | None = None,
+                        admission: AdmissionConfig | None = None,
+                        lat_horizon: int = LAT_HORIZON,
+                        lat_bins: int = LAT_BINS):
+    """Build the memoized serving runner for one (policy, trace) program.
 
-    def dispatch(self, req: Request) -> int:
-        if self.policy == "rr":
-            r = self._rr % len(self.replicas)
-            self._rr += 1
-        elif self.policy == "jsq":
-            r = int(np.argmin([len(rep.fifo) for rep in self.replicas]))
-        elif self.policy == "bp":
-            r = int(np.argmin([rep.backlog(self.eps_b)
-                               for rep in self.replicas]))
-        else:
-            raise ValueError(self.policy)
-        rep = self.replicas[r]
-        req.replica = r
-        rep.enqueued += req.work
-        rep.X += req.prompt
-        rep.D += 4.0 * req.gen
-        rep.admitted_tick += req.work
-        rep.fifo.append((rep.enqueued, req))
-        return r
-
-    def tick(self, now: int) -> List[Request]:
-        finished = []
-        for rep in self.replicas:
-            rep.H = max(rep.H + rep.admitted_tick - rep.cap, 0.0)   # eq. 10
-            rep.admitted_tick = 0.0
-            budget = rep.cap * rep.speed
-            rep.served += budget
-            # drain X first (prefill precedes decode), then D
-            dx = min(rep.X, budget)
-            rep.X -= dx
-            rep.D = max(rep.D - (budget - dx), 0.0)
-            while rep.fifo and rep.fifo[0][0] <= rep.served:
-                _, req = rep.fifo.pop(0)
-                req.done_at = now
-                finished.append(req)
-        return finished
+    Returned object (duck-compatible with the fleet runner where it
+    matters): ``run(pp, lam, eps_b, ekind, key)`` closed program, plus the
+    chunked surface ``init_carry(pp)``, ``chunk_step(pp, lam, eps_b,
+    ekind, key, carry)``, ``finalize(lam, eps_b, carry)``, ``probe(carry)``
+    (small per-sim leaves for between-chunk streaming records), and the
+    shape attributes ``T/window/chunk/n_chunks``.
+    """
+    return _make_serving_runner(cfg, trace, T, chunk, window,
+                                verdict or DEFAULT_VERDICT,
+                                admission or DEFAULT_ADMISSION,
+                                lat_horizon, lat_bins)
 
 
-def simulate(policy: str, *, n_replicas: int = 8, ticks: int = 3000,
-             load: float = 0.85, seed: int = 0, straggler: int = -1,
-             hetero: bool = False, eps_b: float = 0.01) -> dict:
-    """Poisson request trace at target utilization -> latency percentiles."""
-    rng = np.random.default_rng(seed)
-    caps = np.full(n_replicas, 1000.0)
-    if hetero:
-        caps = rng.choice([500.0, 1000.0, 2000.0], size=n_replicas)
-    reps = [Replica(cap=float(c)) for c in caps]
-    if straggler >= 0:
-        reps[straggler].speed = 0.3
-    eff_cap = sum(r.cap * r.speed for r in reps)
-    mean_work = 1088 + 4.0 * 272               # E[prompt] + 4 E[gen]
-    rate = load * eff_cap / mean_work          # requests per tick
+@functools.lru_cache(maxsize=64)
+def _make_serving_runner(cfg: PolicyConfig, trace: TraceSpec, T: int,
+                         chunk: int, window: int | None,
+                         verdict: VerdictConfig, admission: AdmissionConfig,
+                         lat_horizon: int, lat_bins: int):
+    chunk = max(1, min(chunk, T))
+    n_chunks = -(-T // chunk)
+    T_eff = n_chunks * chunk
+    win = T_eff // 2 if window is None else min(window, T_eff)
+    win = max(win, 1)
+    mark = T_eff - win
+    q3_lo, q4_lo = T_eff // 2, (3 * T_eff) // 4
+    vcfg = verdict
+    vwin = chunk if vcfg.window <= 0 else max(1, min(vcfg.window, T_eff))
+    vburn = 2 * vwin if vcfg.burn_in <= 0 else vcfg.burn_in
+    acfg = admission
+    awin = chunk if acfg.window <= 0 else max(1, min(acfg.window, T_eff))
+    aburn = 2 * awin if acfg.burn_in <= 0 else acfg.burn_in
+    K = trace.n_classes
 
-    sched = Scheduler(reps, policy=policy, eps_b=eps_b)
-    done: List[Request] = []
-    rid = 0
-    for t in range(ticks):
-        for _ in range(rng.poisson(rate)):
-            req = Request(rid, t, prompt=int(rng.integers(128, 2048)),
-                          gen=int(rng.integers(32, 512)))
-            sched.dispatch(req)
-            rid += 1
-        done.extend(sched.tick(t))
-    lat = np.array([r.done_at - r.arrival for r in done
-                    if r.done_at is not None], dtype=np.float64)
-    backlog = sum(rep.X + rep.D for rep in reps)
-    return {
-        "completed": len(done), "submitted": rid,
-        "p50": float(np.percentile(lat, 50)) if len(lat) else float("inf"),
-        "p99": float(np.percentile(lat, 99)) if len(lat) else float("inf"),
-        "mean": float(lat.mean()) if len(lat) else float("inf"),
-        "residual_backlog": float(backlog),
-    }
+    event_branches = tuple(EVENT_MODELS[k] for k in EVENT_MODEL_ORDER)
+
+    def slot(pp, lam, eps_b, ekind, key, carry):
+        state, stats, drift, mod, tr, adm, lat, t = carry
+        kt = jax.random.fold_in(key, t)
+        k_cls, k_ev, k_step = jax.random.split(kt, 3)
+        class_arr, tr2 = draw_arrivals(trace, k_cls, lam, t, tr, mod)
+        adm2, admitted = admission_admit(adm, class_arr)
+        esc, csc, mod2 = jax.lax.switch(ekind, event_branches, pp, t, k_ev,
+                                        mod)
+        new_state, m = slot_step(pp.with_capacity_scales(esc, csc), cfg,
+                                 state, admitted, k_step, eps_b=eps_b)
+        tq = m["total_queue"]
+        sq, cq = kahan_add(stats.sum_queue, stats.c_queue, tq)
+        s3, c3 = kahan_add(stats.sum_queue_q3, stats.c_q3,
+                           tq * ((t >= q3_lo) & (t < q4_lo)))
+        s4, c4 = kahan_add(stats.sum_queue_q4, stats.c_q4, tq * (t >= q4_lo))
+        new_stats = StreamStats(
+            sum_queue=sq, c_queue=cq,
+            sum_queue_q3=s3, c_q3=c3,
+            sum_queue_q4=s4, c_q4=c4,
+            max_queue=jnp.maximum(stats.max_queue, tq),
+            useful_at_mark=jnp.where(t == mark - 1, m["delivered_useful"],
+                                     stats.useful_at_mark),
+        )
+        new_drift = drift_verdict_update(
+            drift, t, tq, m["delivered_useful"], lam,
+            window=vwin, burn_in=vburn, k_stable=vcfg.k_stable,
+            k_unstable=vcfg.k_unstable, drift_tol=vcfg.drift_tol,
+            gap_tol=vcfg.gap_tol)
+        # The latency stamps compare the *admitted* cumulative curve (the
+        # shed mass never sojourns) against useful deliveries.
+        lat2 = latency_update(lat, t, adm2.admitted.sum(),
+                              new_state.delivered_useful,
+                              m["delivered_useful"] - state.delivered_useful,
+                              horizon=lat_horizon, n_bins=lat_bins)
+        adm3 = admission_update(acfg, adm2, t, tq, new_state.delivered_useful,
+                                lam, new_drift, window=awin, burn_in=aburn)
+        return (new_state, new_stats, new_drift, mod2, tr2, adm3, lat2,
+                t + 1), None
+
+    def init_carry(pp: PaddedProblem):
+        return (init_state(pp), StreamStats.zero(), DriftStats.zero(),
+                ModState.init(pp), TraceState.init(trace),
+                AdmissionState.zero(K), LatencyStats.zero(lat_horizon,
+                                                          lat_bins),
+                jnp.int32(0))
+
+    def chunk_step(pp: PaddedProblem, lam, eps_b, ekind, key, carry):
+        """Advance one chunk; jitted by the engine with the carry donated
+        (`make_group_launch(runner, mesh, n_step_args=6)`)."""
+        body = functools.partial(slot, pp, lam, eps_b, ekind, key)
+        carry, _ = jax.lax.scan(lambda c, x: body(c), carry, xs=None,
+                                length=chunk)
+        return carry
+
+    def finalize(lam, eps_b, carry) -> Dict[str, jax.Array]:
+        state, stats, drift, _, _, adm, lat, t = carry
+        tf = jnp.maximum(t.astype(jnp.float32), 1.0)
+        admitted_total = adm.admitted.sum()
+        shed_total = adm.shed.sum()
+        offered_total = admitted_total + shed_total
+        decided = drift.verdict != VERDICT_UNDECIDED
+        qtiles = latency_quantiles(lat.hist, (0.5, 0.99),
+                                   horizon=lat_horizon, n_bins=lat_bins)
+        return {
+            "offered": jnp.asarray(lam, jnp.float32),
+            "eps_b": jnp.asarray(eps_b, jnp.float32),
+            # Delivered QPS: trailing-window useful rate, the fleet metric.
+            "delivered_qps": (state.delivered_useful - stats.useful_at_mark)
+            / win,
+            "delivered_useful": state.delivered_useful,
+            "admitted_total": admitted_total,
+            "shed_total": shed_total,
+            "admitted_rate": admitted_total / tf,
+            "shed_frac": shed_total / jnp.maximum(offered_total, 1e-9),
+            "p50_sojourn": qtiles[..., 0],
+            "p99_sojourn": qtiles[..., 1],
+            "mean_sojourn": latency_mean(lat),
+            "mean_queue": stats.sum_queue / tf,
+            "mean_queue_tail": stats.sum_queue_q4 / max(T_eff - q4_lo, 1),
+            "max_queue": stats.max_queue,
+            "gate_open_frac": adm.gate_slots / tf,
+            "gate": adm.gate,
+            "gate_flips": adm.flips.astype(jnp.float32),
+            "verdict": drift.verdict.astype(jnp.float32),
+            "decided_at_slot": jnp.where(decided, drift.decided_at,
+                                         T_eff).astype(jnp.float32),
+            # Per-class fairness readout: each class's admitted share of
+            # its own offered mass ([K] leaves; engine rows keep the list).
+            "class_admitted": adm.admitted,
+            "class_shed": adm.shed,
+            "class_admit_frac": adm.admitted
+            / jnp.maximum(adm.admitted + adm.shed, 1e-9),
+        }
+
+    def probe(carry) -> Dict[str, jax.Array]:
+        """Small per-sim leaves read back between chunk launches — the
+        source of the per-chunk JSONL stream records (cumulative values;
+        the engine differences consecutive probes into windowed metrics)."""
+        state, _, drift, _, _, adm, lat, t = carry
+        return {
+            "t": t,
+            "delivered_useful": state.delivered_useful,
+            "admitted_total": adm.admitted.sum(),
+            "shed_total": adm.shed.sum(),
+            "gate": adm.gate,
+            "gate_flips": adm.flips,
+            "verdict": drift.verdict,
+            "hist": lat.hist,
+        }
+
+    def run(pp: PaddedProblem, lam, eps_b, ekind, key) -> Dict[str, jax.Array]:
+        carry = init_carry(pp)
+
+        def chunk_body(c, _):
+            return chunk_step(pp, lam, eps_b, ekind, key, c), None
+        carry, _ = jax.lax.scan(chunk_body, carry, xs=None, length=n_chunks)
+        return finalize(lam, eps_b, carry)
+
+    run.T = T_eff
+    run.window = win
+    run.chunk = chunk
+    run.n_chunks = n_chunks
+    run.admission_window = awin
+    run.admission_burn_in = aburn
+    run.verdict_window = vwin
+    run.lat_horizon = lat_horizon
+    run.lat_bins = lat_bins
+    run.n_classes = K
+    run.init_carry = init_carry
+    run.chunk_step = chunk_step
+    run.finalize = finalize
+    run.probe = probe
+    run.verdict_of = lambda carry: carry[2].verdict
+    return run

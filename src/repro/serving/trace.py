@@ -1,0 +1,161 @@
+"""Trace-driven workloads: per-class query streams compiled into the carry.
+
+A `TraceSpec` declares the live traffic a serving run faces: a mixture of
+query classes, each drawing from one of the registry's arrival models
+(`fleet.scenarios.ARRIVAL_MODELS` — poisson, bernoulli_batch, constant,
+markov_onoff), optionally modulated by a deterministic diurnal envelope.
+Nothing here materializes a [T] trace: the generator is a per-slot
+function of (key, t, TraceState) evaluated inside the scan body, so
+serving runs ride the same chunked, donated-carry streaming machinery as
+the fleet engine (DESIGN.md §9).
+
+`TraceSpec` is a frozen, hashable dataclass for the same reason
+`PolicyConfig` is: it keys the serving runner's memo cache, so two runs
+over the same trace share one compiled program.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.fleet.scenarios import ARRIVAL_MODELS, ModState
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryClass:
+    """One class of the workload mixture.
+
+    ``frac`` is the class's share of the job's offered rate `lam`; shares
+    must sum to 1 so capacity sweeps stay comparable across traces.
+    """
+
+    name: str
+    arrival: str = "poisson"       # ARRIVAL_MODELS key
+    frac: float = 1.0
+
+    def __post_init__(self):
+        if self.arrival not in ARRIVAL_MODELS:
+            raise ValueError(f"unknown arrival model {self.arrival!r}; "
+                             f"known: {sorted(ARRIVAL_MODELS)}")
+        if not 0.0 < self.frac <= 1.0:
+            raise ValueError(f"class frac must be in (0, 1], got {self.frac}")
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceSpec:
+    """A named workload: query-class mixture + optional diurnal envelope.
+
+    ``diurnal_period`` > 0 modulates every class's rate by a sinusoid of
+    that period (slots) and peak deviation ``diurnal_depth``; the envelope
+    has mean 1 over a period, so the long-run offered rate is exactly
+    `lam` and delivered-QPS stays scoreable against `policy_bound_exact`.
+    """
+
+    name: str
+    classes: Tuple[QueryClass, ...]
+    diurnal_period: int = 0
+    diurnal_depth: float = 0.0
+    description: str = ""
+
+    def __post_init__(self):
+        if not self.classes:
+            raise ValueError("a trace needs at least one query class")
+        tot = sum(c.frac for c in self.classes)
+        if abs(tot - 1.0) > 1e-6:
+            raise ValueError(f"class fracs must sum to 1, got {tot}")
+        if not 0.0 <= self.diurnal_depth < 1.0:
+            raise ValueError("diurnal_depth must be in [0, 1)")
+
+    @property
+    def n_classes(self) -> int:
+        return len(self.classes)
+
+
+class TraceState(NamedTuple):
+    """Per-class arrival-modulation state carried through the scan.
+
+    Each class owns its own ON/OFF phase so two markov_onoff classes burst
+    independently; classes with memoryless arrivals simply never read it.
+    """
+
+    burst: jax.Array   # [K] float32, 1.0 = ON
+
+    @staticmethod
+    def init(spec: TraceSpec) -> "TraceState":
+        return TraceState(jnp.ones((spec.n_classes,), jnp.float32))
+
+
+def envelope(spec: TraceSpec, t: jax.Array) -> jax.Array:
+    """Deterministic diurnal rate multiplier at slot t (mean 1)."""
+    if spec.diurnal_period <= 0:
+        return jnp.float32(1.0)
+    phase = 2.0 * jnp.pi * t.astype(jnp.float32) / spec.diurnal_period
+    return (1.0 + spec.diurnal_depth * jnp.sin(phase)).astype(jnp.float32)
+
+
+def draw_arrivals(spec: TraceSpec, key: jax.Array, lam: jax.Array,
+                  t: jax.Array, tr: TraceState, mod: ModState):
+    """One slot of per-class query arrivals: ([K] arrivals, TraceState').
+
+    Each class reuses its registry arrival model verbatim — the model sees
+    a `ModState` whose scalar `burst` field is that class's own phase, and
+    the updated phase is threaded back into `TraceState.burst[k]`.  The
+    event-model fields of `mod` (link/comp chains) are never touched here.
+    """
+    env = envelope(spec, t)
+    keys = jax.random.split(key, spec.n_classes)
+    arrs, phases = [], []
+    for k, qc in enumerate(spec.classes):
+        fn = ARRIVAL_MODELS[qc.arrival]
+        a, m2 = fn(keys[k], lam * (qc.frac * env), mod._replace(burst=tr.burst[k]))
+        arrs.append(a)
+        phases.append(m2.burst)
+    return jnp.stack(arrs), TraceState(jnp.stack(phases))
+
+
+# ---------------------------------------------------------------------------
+# Trace registry: workloads declared as data, like the scenario registry.
+# ---------------------------------------------------------------------------
+
+TRACES: Dict[str, TraceSpec] = {}
+
+
+def register_trace(spec: TraceSpec) -> TraceSpec:
+    if spec.name in TRACES:
+        raise ValueError(f"trace {spec.name!r} already registered")
+    TRACES[spec.name] = spec
+    return spec
+
+
+def get_trace(name: str) -> TraceSpec:
+    try:
+        return TRACES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown trace {name!r}; known: {sorted(TRACES)}") from None
+
+
+def list_traces() -> list[str]:
+    return sorted(TRACES)
+
+
+register_trace(TraceSpec(
+    "steady", (QueryClass("q", "poisson"),),
+    description="Single Poisson class — the open-loop fleet workload."))
+register_trace(TraceSpec(
+    "bursty", (QueryClass("q", "markov_onoff"),),
+    description="Single Markov ON-OFF class: correlated bursts, mean rate "
+                "exactly lam (the acceptance trace)."))
+register_trace(TraceSpec(
+    "diurnal_mix", (QueryClass("interactive", "poisson", 0.6),
+                    QueryClass("batch", "bernoulli_batch", 0.4)),
+    diurnal_period=2000, diurnal_depth=0.3,
+    description="Poisson + batch mixture under a mean-1 diurnal envelope."))
+register_trace(TraceSpec(
+    "bursty_mix", (QueryClass("bursty", "markov_onoff", 0.5),
+                   QueryClass("steady", "poisson", 0.5)),
+    description="Half bursty, half steady — the fairness stress: shedding "
+                "must not starve either class."))
