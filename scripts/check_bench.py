@@ -35,9 +35,22 @@ Handles both bench tables by shape:
   4. a >25% per-sim wall-time regression vs the baseline's `serving`
      section.
 
-`--mode {auto,fleet,kernels,serving}` (default auto: sniff the table
-shape) picks the checker; the baseline for serving mode is the committed
-`BENCH_baseline.json`, whose `"serving"` key holds the reference table.
+* **atlas** tables (`benchmarks/bench_atlas.py --out`, detected by a
+  top-level `"atlas"` key or forced with `--mode atlas`) — fails on:
+
+  1. any ATLAS_BAND_FAMILIES family whose lam_max/bound_exact ratio
+     median leaves ATLAS_RATIO_BAND (DESIGN.md §10), and
+  2. a fleet that needed more than ATLAS_MAX_PROGRAMS compiled programs,
+     recompiled a chunk step (n_step_compiles != n_programs), advanced
+     fewer than ATLAS_MIN_LANES bisection lanes, blew the
+     ATLAS_MAX_LAUNCHES budget, or batched below ATLAS_MIN_SPEEDUP vs
+     the sequential per-cell launch count, and
+  3. a >25% wall-time regression vs the committed `BENCH_atlas.json`.
+
+`--mode {auto,fleet,kernels,serving,atlas}` (default auto: sniff the
+table shape) picks the checker; the baseline for serving mode is the
+committed `BENCH_baseline.json`, whose `"serving"` key holds the
+reference table.
 
 Peak chunk-step memory is reported as a delta but not gated (XLA temp
 sizing is backend/version dependent).
@@ -52,6 +65,8 @@ Usage:
   python scripts/check_bench.py BENCH_kernels.json BENCH_kernels_baseline.json
   python scripts/check_bench.py --mode serving BENCH_serving.json \
       BENCH_baseline.json
+  python scripts/check_bench.py --mode atlas BENCH_atlas_new.json \
+      BENCH_atlas.json
 """
 from __future__ import annotations
 
@@ -201,14 +216,84 @@ def check_serving(current: dict, baseline: dict) -> list[str]:
     return errors
 
 
+def check_atlas(current: dict, baseline: dict) -> list[str]:
+    """Acceptance + regression gates for bench_atlas tables (DESIGN.md
+    §10).  Gate constants come from benchmarks/bench_atlas.py (single
+    source of truth, asserted there on every bench run); the committed
+    `BENCH_atlas.json` supplies the timing reference."""
+    at = _load_bench_module("bench_atlas")
+    errors: list[str] = []
+    cur = current.get("atlas", current)
+    base = baseline.get("atlas", {})
+
+    # --- 1. wall-time regression vs the committed atlas baseline
+    if os.environ.get("CHECK_BENCH_SKIP_TIMING", "0") != "1":
+        max_reg = float(os.environ.get("CHECK_BENCH_MAX_REGRESSION", "1.25"))
+        cur_w, base_w = cur.get("wall_s"), base.get("wall_s")
+        if cur_w is None:
+            errors.append("atlas table has no wall_s field")
+        elif base_w:
+            ratio = cur_w / base_w
+            print(f"check_bench: atlas wall {cur_w:.0f}s vs baseline "
+                  f"{base_w:.0f}s (x{ratio:.2f}, limit x{max_reg:.2f})")
+            if ratio > max_reg:
+                errors.append(f"atlas wall_s regression: {cur_w:.0f} > "
+                              f"{base_w:.0f} * {max_reg:.2f}")
+
+    # --- 2. per-family ratio band on the unfaded families
+    lo, hi = at.ATLAS_RATIO_BAND
+    fams = cur.get("families", {})
+    for fam in at.ATLAS_BAND_FAMILIES:
+        row = fams.get(fam)
+        if row is None:
+            errors.append(f"atlas table missing family {fam}")
+            continue
+        med = row.get("ratio_median")
+        print(f"check_bench: atlas {fam} ratio_median="
+              f"{'missing' if med is None else format(med, '.3f')} "
+              f"(band [{lo}, {hi}]) undecided_hi="
+              f"{row.get('n_undecided_hi')}/{row.get('n_cells')}")
+        if med is None or not (lo <= med <= hi + 1e-9):
+            errors.append(f"atlas {fam}: lam_max/bound_exact median "
+                          f"{med} outside [{lo}, {hi}]")
+
+    # --- 3. fleet-shape gates: scale, compile discipline, launch budget
+    n_lanes = cur.get("n_lanes", 0)
+    n_prog = cur.get("n_programs", 0)
+    n_comp = cur.get("n_step_compiles")
+    n_launch = cur.get("n_launches", 0)
+    speedup = cur.get("launch_speedup", 0.0)
+    print(f"check_bench: atlas lanes={n_lanes} programs={n_prog} "
+          f"compiles={n_comp} launches={n_launch} speedup=x{speedup:.1f}")
+    if n_lanes < at.ATLAS_MIN_LANES:
+        errors.append(f"atlas: only {n_lanes} bisection lanes "
+                      f"(need >= {at.ATLAS_MIN_LANES})")
+    if n_prog > at.ATLAS_MAX_PROGRAMS:
+        errors.append(f"atlas: {n_prog} compiled programs "
+                      f"(ceiling {at.ATLAS_MAX_PROGRAMS})")
+    if n_comp != n_prog:
+        errors.append(f"atlas: {n_comp} step compiles across {n_prog} "
+                      "programs (rewrites must not retrace)")
+    if n_launch > at.ATLAS_MAX_LAUNCHES:
+        errors.append(f"atlas: {n_launch} chunk launches "
+                      f"(budget {at.ATLAS_MAX_LAUNCHES})")
+    if speedup < at.ATLAS_MIN_SPEEDUP:
+        errors.append(f"atlas: launch speedup x{speedup:.1f} < "
+                      f"x{at.ATLAS_MIN_SPEEDUP}")
+    return errors
+
+
 def check(current: dict, baseline: dict, mode: str = "auto") -> list[str]:
     if mode == "auto":
         mode = ("kernels" if "kernels" in current else
-                "serving" if "serving" in current else "fleet")
+                "serving" if "serving" in current else
+                "atlas" if "atlas" in current else "fleet")
     if mode == "kernels":
         return check_kernels(current, baseline)
     if mode == "serving":
         return check_serving(current, baseline)
+    if mode == "atlas":
+        return check_atlas(current, baseline)
     errors = []
 
     # --- 1. wall-time regression
@@ -308,7 +393,8 @@ def main(argv: list[str]) -> int:
         description="Bench regression gate (see module docstring)")
     ap.add_argument("current", help="freshly produced bench JSON")
     ap.add_argument("baseline", help="committed baseline JSON")
-    ap.add_argument("--mode", choices=("auto", "fleet", "kernels", "serving"),
+    ap.add_argument("--mode",
+                    choices=("auto", "fleet", "kernels", "serving", "atlas"),
                     default="auto",
                     help="which checker to run (auto: sniff table shape)")
     args = ap.parse_args(argv[1:])

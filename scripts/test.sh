@@ -36,7 +36,14 @@
 #     BENCH_serving.json + SERVING_stream.jsonl and scripts/check_bench.py
 #     --mode serving gates delivered-QPS/bound, shedding, p99 sojourn,
 #     overload behavior, and serving-path xla/pallas parity against the
-#     committed baseline's "serving" section (DESIGN.md §9).
+#     committed baseline's "serving" section (DESIGN.md §9);
+#   - an atlas smoke + bench gate: the batched fleet-of-bisections
+#     (DESIGN.md §10) must advance the registry grid in <= 2 compiled
+#     programs and surface UNDECIDED at a too-short horizon, and
+#     benchmarks/bench_atlas.py emits BENCH_atlas_new.json — 108
+#     lambda_max bisections vs their exact LP bounds — gated by
+#     scripts/check_bench.py --mode atlas against the committed
+#     BENCH_atlas.json (ratio band, launch budget, single-compile).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -96,6 +103,32 @@ print(f"frontier_smoke: lam_max={r.lam_max:.2f} / bound={r.bound_exact:.2f}"
       f"{100 * r.slots_saved_frac:.0f}% slots saved) ok")
 PY2
 
+# atlas_smoke: the batched fleet-of-bisections scheduler (DESIGN.md §10)
+# end-to-end across the registry grid at a tiny horizon: 18 (scenario x
+# topo_seed) cells advance in <= 2 compiled programs (wireless_grid forks
+# the second), one step compile each, far fewer launches than per-cell
+# searches.  T=512 cannot latch any verdict (burn-in + 2 windows > T),
+# so every cell must surface UNDECIDED — collapsed bracket, no certain
+# instability — rather than a false UNSTABLE (DESIGN.md §8/§10).
+python - <<'PY4'
+from repro.fleet import registry_cells, sweep_lambda_max
+
+cells = registry_cells(
+    ("paper_grid", "random_geometric", "ring", "tree", "expander",
+     "fat_tree", "wireless_grid", "ge_grid", "ge_comp_grid"),
+    topo_seeds=(0, 1), eps_b=0.05)
+res = sweep_lambda_max(cells, seeds=(0,), T=512, chunk=256,
+                       rel_tol=0.1, max_calls=6)
+assert len(res.rows) == res.n_cells == len(cells) == 18
+assert res.n_programs <= 2 and res.n_step_compiles == res.n_programs, res
+assert res.launch_speedup > 1.0, res.launch_speedup
+assert all(r.undecided and r.hi_certain is None and r.lam_max == 0.0
+           for r in res.rows), "short horizon must read UNDECIDED"
+print(f"atlas_smoke: {res.n_cells} cells in {res.n_launches} launches "
+      f"(seq {res.seq_launches}, x{res.launch_speedup:.1f}) "
+      f"programs={res.n_programs} all-UNDECIDED ok")
+PY4
+
 # serving_smoke: bursty query traffic through the admission gate into the
 # backpressure network (DESIGN.md §9) — at 0.95x the exact LP bound the
 # gate must stay open (no shedding, no flips) and deliver >= 0.9x bound.
@@ -142,3 +175,11 @@ python scripts/check_bench.py --mode fleet BENCH_fleet.json BENCH_baseline.json
 python benchmarks/bench_serving.py --out BENCH_serving.json \
     --stream-out SERVING_stream.jsonl
 python scripts/check_bench.py --mode serving BENCH_serving.json BENCH_baseline.json
+
+# Atlas bench gate: the registry-wide capacity surface (DESIGN.md §10) —
+# 108 (scenario x topo_seed) lambda_max bisections in <= 4 compiled
+# programs -> BENCH_atlas_new.json, gated against the committed
+# BENCH_atlas.json (unfaded-family ratio medians in [0.90, 1.0], one
+# step compile per program, launch budget + batching speedup).
+python benchmarks/bench_atlas.py --out BENCH_atlas_new.json
+python scripts/check_bench.py --mode atlas BENCH_atlas_new.json BENCH_atlas.json

@@ -7,8 +7,11 @@ Public API:
   engine:     FleetJob, FleetResult, run_fleet, stream_simulate,
               make_stream_runner, make_group_launch, VerdictConfig
   report:     capacity_report, sweep_jobs, policy_bound, policy_bound_exact,
-              exact_lam_star
-  frontier:   find_lambda_max, FrontierResult, RateProbe, fold_seed
+              exact_lam_star, atlas_table
+  frontier:   find_lambda_max, FrontierResult, RateProbe, fold_seed,
+              Bisection
+  atlas:      sweep_lambda_max, registry_cells, AtlasJob, AtlasRow,
+              AtlasResult
 """
 from repro.core.queues import (VERDICT_NAMES, VERDICT_STABLE,
                                VERDICT_UNDECIDED, VERDICT_UNSTABLE)
@@ -19,9 +22,12 @@ from .batching import PaddedProblem, PadDims, pad_problem, stack_problems
 from .engine import (DEFAULT_VERDICT, FleetJob, FleetResult, StreamStats,
                      VerdictConfig, make_group_launch, resolve_verdict,
                      run_fleet, stream_simulate, make_stream_runner)
-from .report import (capacity_report, exact_lam_star, policy_bound,
-                     policy_bound_exact, sweep_jobs)
-from .frontier import FrontierResult, RateProbe, find_lambda_max, fold_seed
+from .report import (atlas_table, capacity_report, exact_lam_star,
+                     policy_bound, policy_bound_exact, sweep_jobs)
+from .frontier import (Bisection, FrontierResult, RateProbe, find_lambda_max,
+                       fold_seed)
+from .atlas import (AtlasJob, AtlasResult, AtlasRow, registry_cells,
+                    sweep_lambda_max)
 
 __all__ = [
     "ModState", "Scenario", "register_scenario", "get_scenario",
@@ -35,6 +41,9 @@ __all__ = [
     "VERDICT_NAMES", "VERDICT_UNDECIDED", "VERDICT_STABLE",
     "VERDICT_UNSTABLE",
     "capacity_report", "exact_lam_star", "policy_bound",
-    "policy_bound_exact", "sweep_jobs",
-    "FrontierResult", "RateProbe", "find_lambda_max", "fold_seed",
+    "policy_bound_exact", "sweep_jobs", "atlas_table",
+    "Bisection", "FrontierResult", "RateProbe", "find_lambda_max",
+    "fold_seed",
+    "AtlasJob", "AtlasResult", "AtlasRow", "registry_cells",
+    "sweep_lambda_max",
 ]

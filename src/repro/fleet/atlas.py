@@ -1,0 +1,380 @@
+"""Capacity atlas: a fleet of λ_max bisections in one launch per group.
+
+`frontier.find_lambda_max` measures the paper's headline quantity — the
+maximum sustainable query rate λ_max — for *one* (scenario, topo_seed)
+cell at a time: every probe is its own `run_fleet` call, so sweeping the
+scenario registry is serially bottlenecked on launch count.  The atlas
+inverts it (DESIGN.md §10): the offered rate was *already* per-sim traced
+data in the chunk-step signature, so hundreds of (cell × seed) bisection
+lanes ride **one padded launch per policy group**, each lane probing its
+own cell's current grid rate.
+
+The host loop is the PR-5 machinery turned into a scheduler:
+
+  1. every cell owns a pure `frontier.Bisection` machine (the *identical*
+     machine the sequential path drives — same probe order, same budget
+     semantics), and its `len(seeds)` lanes run the machine's pending
+     grid rate;
+  2. after each chunk launch the host reads the [B] drift leaves
+     (`runner.drift_of`: latched verdict + decision slot) and harvests
+     every cell whose probe finished — all lanes decided (early-stop
+     semantics) or the horizon's `n_chunks` elapsed;
+  3. harvested cells `record(...)` into their machine, pull the next
+     probe, and get their lanes *rewritten in place* at the launch
+     boundary (`engine.make_sim_rewriter`): fresh init carry, t = 0, new
+     `fold_seed(topo_seed, rate_index, 0, seed)` key, new lam — exactly
+     the state a standalone `run_fleet` probe would start from, which is
+     why per-lane streams are bit-identical to the sequential path;
+  4. cells whose machine finishes are *parked*: their verdict leaf is
+     forced UNSTABLE so the freeze mask pins the carry while the rest of
+     the atlas keeps bisecting.
+
+Because untouched lanes pass through the rewrite bit-unchanged
+(`where(False, fresh, old) == old`) and vmap lanes never interact, the
+atlas returns **bit-identical** λ_max to per-cell `find_lambda_max` given
+the same `PadDims` — asserted by `tests/test_atlas.py`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core.graph import ComputeProblem
+from repro.core.queues import VERDICT_NAMES, VERDICT_UNDECIDED
+from .batching import PadDims, pad_problem
+from .engine import (FleetJob, VerdictConfig, _policy_group_key,
+                     make_group_launch, make_sim_rewriter,
+                     make_stream_runner, resolve_verdict)
+from .frontier import Bisection, RateProbe, fold_seed
+from .report import policy_bound_exact
+from .scenarios import arrival_code, event_code, get_scenario
+
+
+@dataclasses.dataclass(frozen=True)
+class AtlasJob:
+    """One cell of the capacity atlas: a (scenario, topo_seed) instance
+    whose λ_max is bisected against its own exact LP bound."""
+
+    scenario: str
+    policy: str = "pi3"
+    topo_seed: int = 0
+    eps_b: float = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class AtlasRow:
+    """One cell's finished frontier search (the atlas analog of
+    `frontier.FrontierResult`, minus the per-search launch accounting
+    that only makes sense sequentially)."""
+
+    scenario: str
+    policy: str
+    eps_b: float
+    topo_seed: int
+    lam_max: float           # largest grid rate verified sustainable
+    bound_exact: float       # the exact regulated LP bound of *this* cell
+    ratio: float             # lam_max / bound_exact
+    lo: float                # final bracket: sustainable side
+    hi: float                # final bracket: unsustainable side
+    n_calls: int             # probes evaluated for this cell
+    n_iters: int             # bisection halvings
+    undecided: bool          # hi never *proven* unstable (DESIGN.md §8):
+                             # blocked by UNDECIDED-at-horizon evidence only
+    hi_certain: float | None  # smallest rate with genuine UNSTABLE evidence
+    total_slots: int         # simulated slots advanced across the probes
+    full_slots: int          # slots a freeze-free search would have run
+    slots_saved: int         # full_slots - total_slots
+    probes: Tuple[RateProbe, ...]
+
+
+@dataclasses.dataclass
+class AtlasResult:
+    """The whole atlas: per-cell rows + fleet-level launch accounting."""
+
+    rows: List[AtlasRow]
+    n_cells: int
+    n_lanes: int             # (cell × seed) bisection lanes advanced
+    n_programs: int          # policy groups (compiled program families)
+    n_launches: int          # chunk-step launches the atlas dispatched
+    seq_launches: int        # launches per-cell find_lambda_max would issue
+    n_rewrites: int          # in-place carry rewrites at launch boundaries
+    n_step_compiles: int     # summed step-program compiles (== n_programs)
+    total_slots: int
+    full_slots: int
+    slots_saved: int
+    launch_slots_saved: int  # sequential-semantics launch savings
+    dims: PadDims
+    T: int
+    chunk: int
+
+    @property
+    def launch_speedup(self) -> float:
+        """How many sequential launches one atlas launch replaced."""
+        return self.seq_launches / self.n_launches if self.n_launches else 0.0
+
+
+def registry_cells(families: Sequence[str], topo_seeds: Sequence[int],
+                   policy: str = "pi3", eps_b: float = 0.01
+                   ) -> List[AtlasJob]:
+    """The (family × topo_seed) atlas grid as `AtlasJob` cells.
+
+    Random families (random_geometric, expander, ...) vary their topology
+    with ``topo_seed``; deterministic ones (paper_grid, ring, ...) reuse
+    the graph but still decouple their probe streams, because every probe
+    seed is `fold_seed(topo_seed, ...)` — so the grid doubles as a
+    seed-replicate study on fixed topologies."""
+    return [AtlasJob(scenario=f, policy=policy, topo_seed=int(ts),
+                     eps_b=eps_b)
+            for f in families for ts in topo_seeds]
+
+
+def sweep_lambda_max(cells: Sequence[AtlasJob], *,
+                     seeds: Sequence[int] = (0,), T: int = 4096,
+                     chunk: int = 512, window: int | None = None,
+                     rel_tol: float = 0.025,
+                     bracket: Tuple[float, float] = (0.5, 1.1),
+                     max_calls: int = 24, early_stop: bool = True,
+                     verdict: VerdictConfig | None = None,
+                     devices=None, dims: PadDims | None = None
+                     ) -> AtlasResult:
+    """Bisect λ_max for every atlas cell, batched: one padded chunk-step
+    launch per policy group advances all cells' current probes at once.
+
+    Parameters mirror `find_lambda_max` — each cell's search is driven by
+    the same `Bisection` machine on the same rel_tol-quantized grid of its
+    own exact bound, with the same `fold_seed` probe streams, so per-cell
+    results are bit-identical to the sequential path run with the atlas
+    ``dims`` (`PadDims.of` over every cell's topology unless given).
+    ``early_stop=True`` (default) harvests a probe as soon as all its
+    lanes latch; ``False`` reproduces full-horizon probing (every probe
+    runs all ``n_chunks`` launches)."""
+    cells = list(cells)
+    if not cells:
+        raise ValueError("empty atlas")
+    seeds = tuple(seeds)
+    vcfg = resolve_verdict(verdict, early_stop)
+    devices = list(devices or jax.devices())
+    ndev = len(devices)
+    mesh = Mesh(np.array(devices), ("fleet",))
+    S = len(seeds)
+
+    # --- per-cell bound, grid step, and bisection machine.  The bracket
+    # arithmetic repeats find_lambda_max token-for-token so both paths
+    # start from the identical integer bracket.
+    bounds: List[float] = []
+    steps: List[float] = []
+    machines: List[Bisection] = []
+    for c in cells:
+        bound = policy_bound_exact(c.scenario, c.policy, c.eps_b,
+                                   topo_seed=c.topo_seed)
+        if bound <= 0.0:
+            raise ValueError(f"{c.scenario}: exact LP bound is {bound}; "
+                             "nothing to bisect")
+        step = rel_tol * bound
+        bounds.append(bound)
+        steps.append(step)
+        machines.append(Bisection(
+            k_lo=max(int(np.floor(bracket[0] * bound / step)), 0),
+            k_hi=max(int(np.ceil(bracket[1] * bound / step)), 1),
+            max_calls=max_calls))
+
+    # --- topologies: build each distinct one once, pad to atlas-wide dims.
+    problem_of: Dict[tuple, ComputeProblem] = {}
+    for c in cells:
+        k = (c.scenario, c.topo_seed)
+        if k not in problem_of:
+            problem_of[k] = get_scenario(c.scenario).build(c.topo_seed)
+    dims = dims or PadDims.of(list(problem_of.values()))
+    padded_of = {k: pad_problem(p, dims) for k, p in problem_of.items()}
+
+    # --- policy groups: the only axis that forks a compiled program.
+    groups: Dict[tuple, List[int]] = {}
+    for ci, c in enumerate(cells):
+        key = _policy_group_key(FleetJob(scenario=c.scenario,
+                                         policy=c.policy, eps_b=c.eps_b,
+                                         topo_seed=c.topo_seed))
+        groups.setdefault(key, []).append(ci)
+
+    rows: List[AtlasRow | None] = [None] * len(cells)
+    n_launches = seq_launches = n_rewrites = 0
+    launch_slots_saved = 0
+    n_step_compiles = 0
+    eff_T = eff_chunk = 0
+
+    for gkey, cidx in groups.items():
+        cfg = FleetJob(scenario=cells[cidx[0]].scenario,
+                       policy=cells[cidx[0]].policy,
+                       eps_b=cells[cidx[0]].eps_b,
+                       topo_seed=cells[cidx[0]].topo_seed).policy_config()
+        runner = make_stream_runner(cfg, T, chunk=chunk, window=window,
+                                    verdict=vcfg)
+        eff_T, eff_chunk = runner.T, runner.chunk
+        n_chunks = runner.n_chunks
+
+        # Lane layout: S contiguous lanes per cell, mesh-padded by
+        # repeating the last real lane (run_fleet's replica convention —
+        # replicas mirror every rewrite of their source cell and are never
+        # harvested).
+        lane_cells = [ci for ci in cidx for _ in seeds]
+        B = len(lane_cells)
+        Bp = -(-B // ndev) * ndev
+        lane_pad = lane_cells + [lane_cells[-1]] * (Bp - B)
+        lane_of = {ci: slice(j * S, (j + 1) * S)
+                   for j, ci in enumerate(cidx)}
+
+        pp = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs),
+            *[padded_of[(cells[ci].scenario, cells[ci].topo_seed)]
+              for ci in lane_pad])
+        eps = jnp.array([cells[ci].eps_b for ci in lane_pad], jnp.float32)
+        ak = jnp.array([arrival_code(get_scenario(cells[ci].scenario).arrival)
+                        for ci in lane_pad], jnp.int32)
+        ek = jnp.array([event_code(get_scenario(cells[ci].scenario).events)
+                        for ci in lane_pad], jnp.int32)
+
+        init_fn, step_fn, _ = make_group_launch(runner, mesh)
+        rewrite_fn = make_sim_rewriter(runner, mesh)
+
+        # Host-side scheduler state: each active cell's pending grid index
+        # and how many chunk launches its current probe has consumed.
+        pending: Dict[int, int] = {}
+        chunks_used: Dict[int, int] = {}
+        probes_of: Dict[int, List[RateProbe]] = {ci: [] for ci in cidx}
+        lam_host = np.zeros(Bp, np.float32)
+        seed_host = np.zeros(Bp, np.int32)
+        active: set = set()
+
+        def _assign(ci: int, k: int) -> None:
+            pending[ci] = k
+            chunks_used[ci] = 0
+            sl = lane_of[ci]
+            lam_host[sl] = np.float32(k * steps[ci])
+            seed_host[sl] = [fold_seed(cells[ci].topo_seed, k, 0, s)
+                             for s in seeds]
+
+        carry = init_fn(pp)
+        park0 = np.zeros(Bp, bool)
+        for ci in cidx:
+            k = machines[ci].next_rate_index()
+            if k is None:           # degenerate budget: decided probe-free
+                rows[ci] = _finish_row(cells[ci], bounds[ci], steps[ci],
+                                       machines[ci], [])
+                park0[lane_of[ci]] = True
+            else:
+                active.add(ci)
+                _assign(ci, k)
+        lam_host[B:] = lam_host[B - 1]
+        seed_host[B:] = seed_host[B - 1]
+        park0[B:] = park0[B - 1]
+        if park0.any():
+            carry = rewrite_fn(pp, jnp.zeros(Bp, bool), jnp.asarray(park0),
+                               carry)
+            n_rewrites += 1
+
+        while active:
+            lam = jnp.asarray(lam_host)
+            keys = jax.vmap(jax.random.PRNGKey)(jnp.asarray(seed_host))
+            carry = step_fn(pp, lam, eps, ak, ek, keys, carry)
+            n_launches += 1
+            for ci in active:
+                chunks_used[ci] += 1
+
+            # Between-launch readout: the two [Bp] drift leaves only.
+            v_leaf, d_leaf = runner.drift_of(carry)
+            verdicts = np.asarray(jax.device_get(v_leaf))
+            decided_at = np.asarray(jax.device_get(d_leaf))
+
+            reset = np.zeros(Bp, bool)
+            park = np.zeros(Bp, bool)
+            changed = False
+            for ci in sorted(active):
+                sl = lane_of[ci]
+                v = verdicts[sl]
+                finished = chunks_used[ci] >= n_chunks or (
+                    early_stop and bool(np.all(v != VERDICT_UNDECIDED)))
+                if not finished:
+                    continue
+                # --- harvest: the exact RateProbe the sequential path
+                # would have built from run_fleet's finalize metrics.
+                k = pending[ci]
+                names = tuple(VERDICT_NAMES[int(x)] for x in v)
+                sustainable = all(n == "STABLE" for n in names)
+                d_eff = np.where(v != VERDICT_UNDECIDED,
+                                 decided_at[sl], runner.T)
+                saved = (int(np.sum(runner.T - d_eff)) if vcfg.freeze
+                         else 0)
+                probes_of[ci].append(RateProbe(
+                    rate_index=k, call_index=0, lam=k * steps[ci],
+                    sustainable=sustainable, verdicts=names,
+                    decided_at=tuple(int(x) for x in d_eff),
+                    slots_run=S * runner.T - saved, slots_saved=saved,
+                    undecided=not sustainable and "UNSTABLE" not in names))
+                seq_launches += chunks_used[ci]
+                launch_slots_saved += \
+                    S * (n_chunks - chunks_used[ci]) * runner.chunk
+                machines[ci].record(k, sustainable,
+                                    probes_of[ci][-1].undecided)
+                k2 = machines[ci].next_rate_index()
+                if k2 is None:
+                    active.discard(ci)
+                    park[sl] = True
+                    rows[ci] = _finish_row(cells[ci], bounds[ci],
+                                           steps[ci], machines[ci],
+                                           probes_of[ci])
+                else:
+                    reset[sl] = True
+                    _assign(ci, k2)
+                changed = True
+            if changed and active:
+                # Replicas mirror the last real lane's fate so they stay
+                # bit-synchronized with (or parked alongside) their source.
+                # No rewrite once the group drains: nothing launches again.
+                reset[B:] = reset[B - 1]
+                park[B:] = park[B - 1]
+                lam_host[B:] = lam_host[B - 1]
+                seed_host[B:] = seed_host[B - 1]
+                carry = rewrite_fn(pp, jnp.asarray(reset),
+                                   jnp.asarray(park), carry)
+                n_rewrites += 1
+
+        try:
+            n_step_compiles += int(step_fn._cache_size())
+        except Exception:  # pragma: no cover - private API moved
+            n_step_compiles = -10 ** 6
+
+    done_rows = [r for r in rows if r is not None]
+    assert len(done_rows) == len(cells)
+    return AtlasResult(
+        rows=done_rows, n_cells=len(cells), n_lanes=len(cells) * S,
+        n_programs=len(groups), n_launches=n_launches,
+        seq_launches=seq_launches, n_rewrites=n_rewrites,
+        n_step_compiles=n_step_compiles,
+        total_slots=sum(r.total_slots for r in done_rows),
+        full_slots=sum(r.full_slots for r in done_rows),
+        slots_saved=sum(r.slots_saved for r in done_rows),
+        launch_slots_saved=launch_slots_saved,
+        dims=dims, T=eff_T, chunk=eff_chunk)
+
+
+def _finish_row(cell: AtlasJob, bound: float, step: float, bis: Bisection,
+                probes: Sequence[RateProbe]) -> AtlasRow:
+    full = sum(p.slots_run + p.slots_saved for p in probes)
+    run_slots = sum(p.slots_run for p in probes)
+    return AtlasRow(
+        scenario=cell.scenario, policy=cell.policy, eps_b=cell.eps_b,
+        topo_seed=cell.topo_seed,
+        lam_max=bis.k_lo * step, bound_exact=bound,
+        ratio=bis.k_lo * step / bound,
+        lo=bis.k_lo * step, hi=bis.k_hi * step,
+        n_calls=len(probes), n_iters=bis.n_iters,
+        undecided=bis.undecided_hi,
+        hi_certain=(None if bis.k_hi_certain is None
+                    else bis.k_hi_certain * step),
+        total_slots=run_slots, full_slots=full,
+        slots_saved=full - run_slots,
+        probes=tuple(probes))

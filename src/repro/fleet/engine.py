@@ -49,8 +49,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core.graph import ComputeProblem
 from repro.core.policies import PolicyConfig, slot_step
 from repro.core.queues import (DriftStats, VERDICT_NAMES, VERDICT_STABLE,
-                               VERDICT_UNDECIDED, drift_verdict_update,
-                               init_state, kahan_add)
+                               VERDICT_UNDECIDED, VERDICT_UNSTABLE,
+                               drift_verdict_update, init_state, kahan_add)
 from .batching import PadDims, PaddedProblem, pad_problem
 from .scenarios import (ARRIVAL_MODELS, ARRIVAL_MODEL_ORDER, EVENT_MODELS,
                         EVENT_MODEL_ORDER, ModState, arrival_code, event_code,
@@ -350,6 +350,10 @@ def _make_stream_runner(cfg: PolicyConfig, T: int, chunk: int,
     # Cheap between-chunk readout: the [B] int32 verdict leaf of the carry
     # (the only thing `run_fleet` transfers per chunk when early-stopping).
     run.verdict_of = lambda carry: carry[2].verdict
+    # Atlas readout (DESIGN.md §10): the two drift leaves a bisection host
+    # loop needs per launch boundary — latched verdict + the slot it
+    # latched at — without running `finalize` mid-flight.
+    run.drift_of = lambda carry: (carry[2].verdict, carry[2].decided_at)
     return run
 
 
@@ -438,6 +442,44 @@ def make_group_launch(runner, mesh: Mesh, n_step_args: int = 7):
                       donate_argnums=(n_step_args - 1,))
     fin_fn = jax.jit(_sharded(runner.finalize, 3))
     return init_fn, step_fn, fin_fn
+
+
+@functools.lru_cache(maxsize=64)
+def make_sim_rewriter(runner, mesh: Mesh):
+    """Jit the per-sim carry *rewrite* of the capacity atlas (DESIGN.md §10).
+
+    Returns ``rewrite_fn(pp, reset, park, carry) -> carry``, a
+    `jax.jit(shard_map(vmap(...)))` over the same `"fleet"` mesh axis as
+    `make_group_launch`, with the carry donated like the chunk step.  Two
+    [B] bool masks drive it at a launch boundary:
+
+      * ``reset`` — the lane starts its cell's *next* bisection probe:
+        its whole carry is replaced by a fresh `init_carry(pp)` (t = 0
+        included, so the RNG stream restarts under the new fold_seed key
+        the host passes to the next launch).  `where(False, fresh, old)`
+        is exactly ``old``, so untouched lanes are bit-identical to a
+        rewrite-free run — the atlas-vs-sequential equivalence hinge.
+      * ``park`` — the lane's cell finished its whole search: the verdict
+        leaf is forced to UNSTABLE so the freeze mask pins the carry
+        bit-exactly for every remaining launch (a no-op unless the runner
+        freezes, i.e. `early_stop=True` semantics).
+
+    Memoized on `(runner, mesh)` like the launch programs: one compiled
+    rewrite per policy group, asserted by the atlas single-compile test."""
+    spec = P("fleet")
+
+    def rewrite(pp, reset, park, carry):
+        fresh = runner.init_carry(pp)
+        state, stats, drift, mod, t = jax.tree_util.tree_map(
+            lambda f, o: jnp.where(reset, f, o), fresh, carry)
+        drift = drift._replace(verdict=jnp.where(
+            park, jnp.int32(VERDICT_UNSTABLE), drift.verdict))
+        return (state, stats, drift, mod, t)
+
+    return jax.jit(
+        shard_map(jax.vmap(rewrite), mesh=mesh, in_specs=(spec,) * 4,
+                  out_specs=spec, check_rep=False),
+        donate_argnums=(3,))
 
 
 def _memory_analysis(step_fn, args) -> Dict[str, float] | None:

@@ -28,11 +28,23 @@ iff every seed's sim latches STABLE.  The search contract:
 
 Verdict aggregation is conservative: UNDECIDED (like UNSTABLE) counts as
 unsustainable, so λ_max is biased *down*, never above the true frontier.
+The two outcomes are *recorded* separately, though: every probe carries an
+``undecided`` flag (no seed latched UNSTABLE — the probe was blocked by
+horizon-limited evidence, not by a diverging queue), and the result's
+``undecided`` flag marks a final bracket whose upper end was never
+*proven* unstable — the honest reading is "λ_max is at least ``lo``,
+localization above it is horizon-limited", not "``hi`` is infeasible".
+
+The bisection *control flow* lives in the pure `Bisection` state machine
+so the sequential driver here and the batched capacity atlas
+(`fleet.atlas`, DESIGN.md §10) advance bit-identical searches: same probe
+order, same budget semantics, same final bracket, given the same verdict
+oracle.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -78,6 +90,148 @@ def fold_seed(topo_seed: int, rate_index: int, call_index: int,
     return int(_mix64(h) & 0x7FFFFFFF)
 
 
+class Bisection:
+    """Pure pull-based bisection state machine for one frontier cell.
+
+    The exact control flow `find_lambda_max` has always run — shrink the
+    floor (``k_lo //= 2`` until sustainable), push the ceiling (``k_hi *= 2``
+    while sustainable), then integer bisection — inverted into a state
+    machine the *driver* pulls probes from: `next_rate_index()` returns the
+    grid index to evaluate next (or None when the search is finished), and
+    `record(k, sustainable, undecided)` feeds the verdict back.  Cached
+    indices and the ``max_calls`` budget are consumed internally, so a
+    driver never sees a repeat probe and the budget-exhausted pseudo-result
+    (conservative: unsustainable, nothing cached) matches the sequential
+    path's semantics exactly.
+
+    This is what makes the batched capacity atlas (`fleet.atlas`,
+    DESIGN.md §10) bit-equivalent to per-scenario `find_lambda_max`: both
+    drive the *same* machine, only the probe evaluation is batched.
+
+    Outcome bookkeeping is conservative-but-honest (DESIGN.md §8):
+    UNDECIDED counts as unsustainable for the bracket update, but
+    `undecided_hi` flags a final upper end that was never *proven*
+    unstable, and `k_hi_certain` is the smallest index with genuinely
+    UNSTABLE evidence (None if the search never saw one) — the widened,
+    certain bracket is ``(k_lo, k_hi_certain)``.
+    """
+
+    def __init__(self, k_lo: int, k_hi: int, max_calls: int = 24):
+        self.k_lo = max(int(k_lo), 0)
+        self.k_hi = max(int(k_hi), self.k_lo + 1)
+        self.max_calls = int(max_calls)
+        self.n_evals = 0             # probes actually evaluated (the budget)
+        self.n_iters = 0             # bisection halvings (excl. validation)
+        # k -> (sustainable, undecided); undecided = blocked by UNDECIDED
+        # seeds only, no UNSTABLE evidence.
+        self.outcomes: Dict[int, Tuple[bool, bool]] = {}
+        self._phase = "lo"           # lo -> hi -> mid -> done
+        self._pending: Optional[int] = None
+        self._mid_pending: Optional[int] = None
+        self.done = False
+
+    def _resolve(self, k: int) -> Tuple[bool, bool]:
+        """evaluate(k) without launching: (resolved, sustainable)."""
+        if k <= 0:
+            return True, True        # lam = 0 is trivially sustainable
+        if k in self.outcomes:
+            return True, self.outcomes[k][0]
+        if self.n_evals >= self.max_calls:
+            return True, False       # budget exhausted: stay conservative
+        return False, False
+
+    def next_rate_index(self) -> Optional[int]:
+        """The next grid index to probe, or None when the search is done.
+
+        Idempotent while a probe is outstanding: repeated calls return the
+        same pending index until `record` resolves it."""
+        if self._pending is not None:
+            return self._pending
+        while not self.done:
+            if self._phase == "lo":
+                # shrink toward a sustainable floor
+                if self.k_lo <= 0:
+                    self._phase = "hi"
+                    continue
+                resolved, ok = self._resolve(self.k_lo)
+                if not resolved:
+                    self._pending = self.k_lo
+                    return self.k_lo
+                if ok:
+                    self._phase = "hi"
+                else:
+                    self.k_lo //= 2
+            elif self._phase == "hi":
+                # a sustainable ceiling means the bracket missed: push it
+                resolved, ok = self._resolve(self.k_hi)
+                if not resolved:
+                    self._pending = self.k_hi
+                    return self.k_hi
+                if ok and self.n_evals < self.max_calls:
+                    self.k_lo = max(self.k_lo, self.k_hi)
+                    self.k_hi *= 2
+                else:
+                    self._phase = "mid"
+            else:
+                # integer bisection: invariant of the starting bracket
+                if self._mid_pending is not None:
+                    # A bisection iteration that issued a probe finishes
+                    # *after* the budget check it already passed — the
+                    # sequential loop applies the outcome of its last
+                    # in-budget probe before re-testing the loop guard.
+                    mid, self._mid_pending = self._mid_pending, None
+                    if self.outcomes[mid][0]:
+                        self.k_lo = mid
+                    else:
+                        self.k_hi = mid
+                    self.n_iters += 1
+                    continue
+                if self.k_hi - self.k_lo <= 1 or \
+                        self.n_evals >= self.max_calls:
+                    self.done = True
+                    break
+                mid = (self.k_lo + self.k_hi) // 2
+                resolved, ok = self._resolve(mid)
+                if not resolved:
+                    self._pending = mid
+                    self._mid_pending = mid
+                    return mid
+                if ok:
+                    self.k_lo = mid
+                else:
+                    self.k_hi = mid
+                self.n_iters += 1
+        return None
+
+    def record(self, k: int, sustainable: bool,
+               undecided: bool = False) -> None:
+        """Resolve the pending probe.  ``undecided`` marks a probe blocked
+        only by UNDECIDED-at-horizon seeds (no UNSTABLE evidence)."""
+        if k != self._pending:
+            raise ValueError(f"recorded k={k} but pending probe is "
+                             f"{self._pending}")
+        # A decided (done) machine never has a pending probe, so a stray
+        # record after convergence raises above rather than mutating state.
+        self.outcomes[k] = (bool(sustainable), bool(undecided))
+        self.n_evals += 1
+        self._pending = None
+
+    @property
+    def undecided_hi(self) -> bool:
+        """Final upper end blocked by horizon-limited (UNDECIDED) evidence
+        rather than a proven UNSTABLE verdict."""
+        o = self.outcomes.get(self.k_hi)
+        return bool(o is not None and not o[0] and o[1])
+
+    @property
+    def k_hi_certain(self) -> Optional[int]:
+        """Smallest probed index with genuinely UNSTABLE evidence — the
+        honest (widened) upper bracket end when `undecided_hi`."""
+        certain = [k for k, (ok, und) in self.outcomes.items()
+                   if not ok and not und]
+        return min(certain) if certain else None
+
+
 @dataclasses.dataclass(frozen=True)
 class RateProbe:
     """One evaluated rate of the frontier search."""
@@ -90,6 +244,8 @@ class RateProbe:
     decided_at: Tuple[int, ...]
     slots_run: int           # simulated slots actually advanced
     slots_saved: int         # simulated slots the freeze skipped
+    undecided: bool = False  # unsustainable only for lack of evidence: no
+                             # seed latched UNSTABLE (horizon-limited)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,6 +269,13 @@ class FrontierResult:
     launch_slots_saved: int  # chunks never dispatched once groups decided
     n_step_compiles: int     # compiled chunk-step programs used (must be 1)
     probes: Tuple[RateProbe, ...]
+    undecided: bool = False  # final bracket's upper end was never *proven*
+                             # unstable — blocked by UNDECIDED-at-horizon
+                             # evidence only (satellite: DESIGN.md §8)
+    hi_certain: float | None = None  # smallest rate with genuine UNSTABLE
+                                     # evidence; None if the search saw none.
+                                     # When `undecided`, the honest (widened)
+                                     # bracket is (lo, hi_certain].
 
     @property
     def slots_saved_frac(self) -> float:
@@ -127,7 +290,7 @@ def find_lambda_max(scenario: str, policy: str = "pi3", *,
                     bracket: Tuple[float, float] = (0.5, 1.1),
                     max_calls: int = 24, early_stop: bool = True,
                     verdict: VerdictConfig | None = None,
-                    devices=None) -> FrontierResult:
+                    devices=None, dims=None) -> FrontierResult:
     """Locate the empirical max sustainable rate λ_max of one (scenario,
     policy) pair by bisecting offered rate over early-stopped fleet runs.
 
@@ -135,8 +298,11 @@ def find_lambda_max(scenario: str, policy: str = "pi3", *,
     it is validated first (lo must be sustainable, hi unsustainable) and
     expanded/shrunk on the quantized grid if not.  Every probe runs
     ``len(seeds)`` sims through `run_fleet(early_stop=...)`; the probe is
-    sustainable iff all of them latch STABLE.  See the module docstring
-    for the quantization / seed-fold / launch-only contract."""
+    sustainable iff all of them latch STABLE.  ``dims`` optionally pins the
+    padded topology dims (`batching.PadDims`) — the atlas equivalence tests
+    pass the atlas-wide dims here so both paths run the identical padded
+    program.  See the module docstring for the quantization / seed-fold /
+    launch-only contract."""
     bound = policy_bound_exact(scenario, policy, eps_b, topo_seed=topo_seed)
     if bound <= 0.0:
         raise ValueError(f"{scenario}: exact LP bound is {bound}; "
@@ -146,17 +312,19 @@ def find_lambda_max(scenario: str, policy: str = "pi3", *,
     seeds = tuple(seeds)
 
     probes: List[RateProbe] = []
-    cache: Dict[int, RateProbe] = {}
-    launch_saved = [0]
+    launch_saved = 0
 
-    def evaluate(k: int) -> bool:
-        if k <= 0:
-            return True               # lam = 0 is trivially sustainable
-        if k in cache:
-            return cache[k].sustainable
-        if len(probes) >= max_calls:
-            return False              # budget exhausted: stay conservative
-        # Each grid index is evaluated once per search (the memo above),
+    # The control flow lives in the pure Bisection machine — the identical
+    # machine `fleet.atlas` advances for hundreds of cells at once — so the
+    # sequential and batched searches probe the same grid indices in the
+    # same order with the same budget semantics.
+    bis = Bisection(
+        k_lo=max(int(np.floor(bracket[0] * bound / step)), 0),
+        k_hi=max(int(np.ceil(bracket[1] * bound / step)), 1),
+        max_calls=max_calls)
+
+    while (k := bis.next_rate_index()) is not None:
+        # Each grid index is evaluated once per search (the machine's memo),
         # always at call_index 0 — deterministic per rate, which is what
         # makes the result invariant to the initial bracket.
         jobs = [FleetJob(scenario=scenario, policy=policy, lam=k * step,
@@ -165,39 +333,21 @@ def find_lambda_max(scenario: str, policy: str = "pi3", *,
                 for s in seeds]
         res = run_fleet(jobs, T=T, chunk=chunk, window=window,
                         early_stop=early_stop, verdict=verdict,
-                        devices=devices)
-        launch_saved[0] += res.launch_slots_saved
+                        devices=devices, dims=dims)
+        launch_saved += res.launch_slots_saved
         names = res.verdicts()
+        sustainable = all(v == "STABLE" for v in names)
         probe = RateProbe(
             rate_index=k, call_index=0, lam=k * step,
-            sustainable=all(v == "STABLE" for v in names),
+            sustainable=sustainable,
             verdicts=tuple(names),
             decided_at=tuple(int(d)
                              for d in res.column("decided_at_slot")),
             slots_run=res.n_sims * res.T - res.slots_saved,
-            slots_saved=res.slots_saved)
-        cache[k] = probe
+            slots_saved=res.slots_saved,
+            undecided=not sustainable and "UNSTABLE" not in names)
         probes.append(probe)
-        return probe.sustainable
-
-    # --- bracket on the grid, then validate its verdicts.
-    k_lo = max(int(np.floor(bracket[0] * bound / step)), 0)
-    k_hi = max(int(np.ceil(bracket[1] * bound / step)), k_lo + 1)
-    while k_lo > 0 and not evaluate(k_lo):
-        k_lo //= 2                    # shrink toward a sustainable floor
-    while evaluate(k_hi) and len(probes) < max_calls:
-        k_lo = max(k_lo, k_hi)        # hi was sustainable: push the ceiling
-        k_hi *= 2
-
-    # --- integer bisection: invariant of the starting bracket.
-    n_iters = 0
-    while k_hi - k_lo > 1 and len(probes) < max_calls:
-        k_mid = (k_lo + k_hi) // 2
-        if evaluate(k_mid):
-            k_lo = k_mid
-        else:
-            k_hi = k_mid
-        n_iters += 1
+        bis.record(k, probe.sustainable, probe.undecided)
 
     # Each probe's engine accounting already splits n_sims * T_eff into
     # (slots_run, slots_saved); summing both sides recovers the full-run
@@ -206,16 +356,20 @@ def find_lambda_max(scenario: str, policy: str = "pi3", *,
     run_slots = sum(p.slots_run for p in probes)
     return FrontierResult(
         scenario=scenario, policy=policy, eps_b=eps_b, topo_seed=topo_seed,
-        lam_max=k_lo * step, bound_exact=bound,
-        ratio=k_lo * step / bound, lo=k_lo * step, hi=k_hi * step,
-        n_calls=len(probes), n_iters=n_iters,
+        lam_max=bis.k_lo * step, bound_exact=bound,
+        ratio=bis.k_lo * step / bound,
+        lo=bis.k_lo * step, hi=bis.k_hi * step,
+        n_calls=len(probes), n_iters=bis.n_iters,
         total_slots=run_slots, full_slots=full,
         slots_saved=full - run_slots,
-        launch_slots_saved=launch_saved[0],
+        launch_slots_saved=launch_saved,
         n_step_compiles=_probe_step_compiles(
             scenario, policy, eps_b, topo_seed, T, chunk, window, vcfg,
             devices),
-        probes=tuple(probes))
+        probes=tuple(probes),
+        undecided=bis.undecided_hi,
+        hi_certain=(None if bis.k_hi_certain is None
+                    else bis.k_hi_certain * step))
 
 
 def _probe_step_compiles(scenario, policy, eps_b, topo_seed, T, chunk,

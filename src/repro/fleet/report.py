@@ -104,6 +104,59 @@ def sweep_jobs(scenario_policies: Dict[str, Sequence[str]],
     return jobs
 
 
+def atlas_table(result) -> dict:
+    """JSON-serializable capacity-atlas table (DESIGN.md §10).
+
+    Takes an `atlas.AtlasResult` (duck-typed: anything with its fields
+    works, which keeps this module import-free of `fleet.atlas`) and
+    summarizes the measured-vs-LP frontier per scenario family: ratio
+    median/min/max over the family's cells, how many cells ended
+    UNDECIDED at the bracket top (horizon-limited localization,
+    DESIGN.md §8) vs proven UNSTABLE, plus the fleet-level launch
+    accounting the atlas bench gates on."""
+    fam: Dict[str, list] = {}
+    for r in result.rows:
+        fam.setdefault(r.scenario, []).append(r)
+    families = {}
+    for scen, rows in fam.items():
+        ratios = np.array([r.ratio for r in rows])
+        families[scen] = {
+            "n_cells": len(rows),
+            "ratio_median": float(np.median(ratios)),
+            "ratio_min": float(ratios.min()),
+            "ratio_max": float(ratios.max()),
+            "n_undecided_hi": int(sum(r.undecided for r in rows)),
+            "n_calls_mean": float(np.mean([r.n_calls for r in rows])),
+            "bound_exact_mean": float(np.mean([r.bound_exact
+                                               for r in rows])),
+            "cells": [
+                {"topo_seed": r.topo_seed, "lam_max": r.lam_max,
+                 "bound_exact": r.bound_exact, "ratio": r.ratio,
+                 "lo": r.lo, "hi": r.hi, "n_calls": r.n_calls,
+                 "undecided_hi": bool(r.undecided),
+                 "hi_certain": r.hi_certain}
+                for r in rows],
+        }
+    return {
+        "n_cells": result.n_cells,
+        "n_lanes": result.n_lanes,
+        "n_programs": result.n_programs,
+        "n_launches": result.n_launches,
+        "seq_launches": result.seq_launches,
+        "launch_speedup": result.launch_speedup,
+        "n_rewrites": result.n_rewrites,
+        "n_step_compiles": result.n_step_compiles,
+        "slots_saved": result.slots_saved,
+        "full_slots": result.full_slots,
+        "launch_slots_saved": result.launch_slots_saved,
+        "pad_dims": {"n_nodes": result.dims.n_nodes,
+                     "n_edges": result.dims.n_edges,
+                     "n_comp": result.dims.n_comp},
+        "T": result.T, "chunk": result.chunk,
+        "families": families,
+    }
+
+
 def capacity_report(scenario_policies: Dict[str, Sequence[str]],
                     rate_fracs: Sequence[float], seeds: Sequence[int],
                     T: int, chunk: int = 1024, window: int | None = None,
