@@ -26,7 +26,8 @@ committed `BENCH_atlas.json` baseline.
 
 Usage:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
-      python benchmarks/bench_atlas.py [--out BENCH_atlas.json]
+      python benchmarks/bench_atlas.py [--out BENCH_atlas.json] \
+          [--stream-out ATLAS_stream.jsonl]
 """
 from __future__ import annotations
 
@@ -77,7 +78,7 @@ ATLAS_MAX_LAUNCHES = 250
 ATLAS_MIN_SPEEDUP = 5.0
 
 
-def run(emit) -> dict:
+def run(emit, stream_out: str | None = None) -> dict:
     """Run the atlas sweep, assert the gates, return the JSON table."""
     from repro.fleet import atlas_table, registry_cells, sweep_lambda_max
 
@@ -85,11 +86,13 @@ def run(emit) -> dict:
     cells = registry_cells(c.pop("families"), c.pop("topo_seeds"),
                            policy=c.pop("policy"), eps_b=c.pop("eps_b"))
     t0 = time.time()
-    res = sweep_lambda_max(cells, **c)
+    res = sweep_lambda_max(cells, **c, stream_path=stream_out)
     wall = time.time() - t0
 
     table = atlas_table(res)
     table["wall_s"] = wall
+    if res.stream_records:
+        table["stream_records"] = len(res.stream_records)
     table["us_per_lane_slot"] = (1e6 * wall / res.total_slots
                                  if res.total_slots else 0.0)
     emit(f"fleet/atlas/sweep,{table['us_per_lane_slot']:.1f},"
@@ -131,12 +134,18 @@ def run(emit) -> dict:
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--out", default=None, help="write the JSON table here")
+    ap.add_argument("--stream-out", default=None,
+                    help="write per-launch telemetry records (JSONL, "
+                    "repro.obs.schema) here while the sweep runs")
     args = ap.parse_args()
-    table = run(print)
+    table = run(print, stream_out=args.stream_out)
     if args.out:
         with open(args.out, "w") as f:
             json.dump(table, f, indent=2)
         print(f"wrote {args.out}")
+    if args.stream_out:
+        print(f"wrote {args.stream_out} "
+              f"({table['atlas'].get('stream_records', 0)} records)")
 
 
 if __name__ == "__main__":

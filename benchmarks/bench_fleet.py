@@ -28,7 +28,8 @@ stop must save >= FRONTIER_MIN_SAVED_FRAC of the simulated slots.
 
 Usage:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
-      python benchmarks/bench_fleet.py --preset smoke [--out fleet.json]
+      python benchmarks/bench_fleet.py --preset smoke [--out fleet.json] \
+          [--stream-out FLEET_stream.jsonl]
 """
 from __future__ import annotations
 
@@ -211,12 +212,13 @@ def backend_compare(emit) -> dict:
     return out
 
 
-def run(emit, preset: str = "smoke") -> dict:
+def run(emit, preset: str = "smoke", stream_out: str | None = None) -> dict:
     from repro.fleet import capacity_report
 
     spec = PRESETS[preset]
     t0 = time.time()
-    table = capacity_report(**spec, memory_stats=True)
+    table = capacity_report(**spec, memory_stats=True,
+                            stream_path=stream_out)
     wall = time.time() - t0
     table["preset"] = preset
     table["wall_s"] = wall
@@ -286,12 +288,18 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--preset", choices=sorted(PRESETS), default="smoke")
     ap.add_argument("--out", default=None, help="write the JSON table here")
+    ap.add_argument("--stream-out", default=None,
+                    help="write per-chunk telemetry records (JSONL, "
+                    "repro.obs.schema) here while the sweep runs")
     args = ap.parse_args()
-    table = run(print, preset=args.preset)
+    table = run(print, preset=args.preset, stream_out=args.stream_out)
     if args.out:
         with open(args.out, "w") as f:
             json.dump(table, f, indent=2)
         print(f"wrote {args.out}")
+    if args.stream_out:
+        print(f"wrote {args.stream_out} "
+              f"({table.get('stream_records', 0)} records)")
 
 
 if __name__ == "__main__":

@@ -47,10 +47,12 @@ Handles both bench tables by shape:
      the sequential per-cell launch count, and
   3. a >25% wall-time regression vs the committed `BENCH_atlas.json`.
 
-`--mode {auto,fleet,kernels,serving,atlas}` (default auto: sniff the
-table shape) picks the checker; the baseline for serving mode is the
+`--mode {auto,fleet,kernels,serving,atlas,stream}` (default auto: sniff
+the table shape) picks the checker; the baseline for serving mode is the
 committed `BENCH_baseline.json`, whose `"serving"` key holds the
-reference table.
+reference table.  A `.jsonl` current sniffs as **stream** — the file is
+schema-validated against `repro.obs.schema` (delegating to
+`scripts/check_stream.py`, DESIGN.md §11) and needs no baseline.
 
 Peak chunk-step memory is reported as a delta but not gated (XLA temp
 sizing is backend/version dependent).
@@ -387,17 +389,56 @@ def check(current: dict, baseline: dict, mode: str = "auto") -> list[str]:
     return errors
 
 
+def check_stream_files(paths: list[str]) -> list[str]:
+    """Delegate ``*_stream.jsonl`` validation to the schema gate
+    (scripts/check_stream.py), so `--mode auto` covers stream files with
+    the same contract CI's dedicated gate enforces."""
+    spec = importlib.util.spec_from_file_location(
+        "check_stream",
+        pathlib.Path(__file__).resolve().parent / "check_stream.py")
+    cs = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(cs)
+    errors = []
+    for p in paths:
+        if not pathlib.Path(p).exists():
+            errors.append(f"{p}: missing stream file")
+        else:
+            errors.extend(cs.check_file(p))
+    return errors
+
+
 def main(argv: list[str]) -> int:
     import argparse
     ap = argparse.ArgumentParser(
         description="Bench regression gate (see module docstring)")
-    ap.add_argument("current", help="freshly produced bench JSON")
-    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("current", help="freshly produced bench JSON "
+                    "(or a *_stream.jsonl to schema-validate)")
+    ap.add_argument("baseline", nargs="?", default=None,
+                    help="committed baseline JSON (unused in stream mode)")
     ap.add_argument("--mode",
-                    choices=("auto", "fleet", "kernels", "serving", "atlas"),
+                    choices=("auto", "fleet", "kernels", "serving", "atlas",
+                             "stream"),
                     default="auto",
-                    help="which checker to run (auto: sniff table shape)")
+                    help="which checker to run (auto: sniff table shape; "
+                    "*.jsonl files sniff as stream)")
     args = ap.parse_args(argv[1:])
+
+    # Stream sniffing: a .jsonl current (or --mode stream) is a stream
+    # record file, validated against repro.obs.schema — no baseline table.
+    if args.mode == "stream" or (args.mode == "auto"
+                                 and args.current.endswith(".jsonl")):
+        paths = [args.current]
+        if args.baseline and args.baseline.endswith(".jsonl"):
+            paths.append(args.baseline)
+        errors = check_stream_files(paths)
+        for e in errors:
+            print(f"check_bench: ERROR: {e}", file=sys.stderr)
+        if not errors:
+            print(f"check_bench: stream schema ok ({', '.join(paths)})")
+        return 1 if errors else 0
+
+    if args.baseline is None:
+        ap.error("baseline is required outside stream mode")
     with open(args.current) as f:
         current = json.load(f)
     with open(args.baseline) as f:

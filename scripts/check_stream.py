@@ -1,0 +1,101 @@
+#!/usr/bin/env python
+"""Stream-record schema gate (CI: scripts/test.sh, after the bench runs).
+
+Validates every emitted ``*_stream.jsonl`` against the versioned schema
+in `repro.obs.schema` (DESIGN.md §11):
+
+  1. the schema module itself is *blessed* — `schema_digest()` must match
+     ``BLESSED_DIGESTS[SCHEMA_VERSION]``, so editing a field table
+     without bumping SCHEMA_VERSION (and blessing the new digest) fails
+     here before any file is read;
+  2. every line parses as JSON and carries the current
+     ``schema_version``;
+  3. every record's key set and value types match its kind's field table
+     exactly (unknown keys are schema drift, missing keys are truncation);
+  4. the stream clock is monotone: ``t`` non-decreasing and ``chunk``
+     strictly increasing per ``(kind, group)``.
+
+Files passed explicitly must exist; with no arguments the script globs
+``*_stream.jsonl`` in the repo root and soft-passes when none are there
+(the benches that emit them may have been skipped).
+
+Usage:
+  python scripts/check_stream.py SERVING_stream.jsonl FLEET_stream.jsonl
+  python scripts/check_stream.py            # glob *_stream.jsonl
+"""
+from __future__ import annotations
+
+import glob
+import json
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+from repro.obs import schema  # noqa: E402  (path bootstrap above)
+
+
+def check_file(path: str) -> list[str]:
+    errs: list[str] = []
+    records = []
+    with open(path) as f:
+        for i, line in enumerate(f):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                records.append(json.loads(line))
+            except json.JSONDecodeError as e:
+                errs.append(f"{path}:{i + 1}: not valid JSON ({e})")
+    if not records and not errs:
+        errs.append(f"{path}: no records")
+    errs.extend(f"{path}: {e}" for e in schema.validate_stream(records))
+    return errs
+
+
+def main(argv: list[str]) -> int:
+    errors: list[str] = []
+
+    digest = schema.schema_digest()
+    blessed = schema.BLESSED_DIGESTS.get(schema.SCHEMA_VERSION)
+    if blessed is None:
+        errors.append(
+            f"SCHEMA_VERSION {schema.SCHEMA_VERSION} has no blessed digest "
+            "in repro.obs.schema.BLESSED_DIGESTS")
+    elif digest != blessed:
+        errors.append(
+            "schema changed without a version bump: schema_digest() = "
+            f"{digest} but BLESSED_DIGESTS[{schema.SCHEMA_VERSION}] = "
+            f"{blessed}. Bump SCHEMA_VERSION and bless the new digest.")
+
+    paths = argv[1:]
+    if not paths:
+        paths = sorted(glob.glob(str(REPO / "*_stream.jsonl")))
+        if not paths:
+            print("check_stream: no *_stream.jsonl files found; "
+                  "schema digest " +
+                  ("ok" if not errors else "BROKEN"))
+            return 1 if errors else 0
+
+    n_records = 0
+    for p in paths:
+        if not pathlib.Path(p).exists():
+            errors.append(f"{p}: missing (was its bench skipped?)")
+            continue
+        errs = check_file(p)
+        errors.extend(errs)
+        if not errs:
+            n_records += sum(1 for _ in open(p))
+
+    for e in errors:
+        print(f"check_stream: ERROR: {e}", file=sys.stderr)
+    if not errors:
+        print(f"check_stream: {len(paths)} files, {n_records} records, "
+              f"schema v{schema.SCHEMA_VERSION} "
+              f"(digest {digest[:12]}...) all valid")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -1,0 +1,57 @@
+#!/usr/bin/env bash
+# Blessed fleet-run entrypoint with production run hygiene (DESIGN.md §11):
+#
+#   - tcmalloc preloaded when available (glibc malloc fragments badly
+#     under XLA's large transient allocations on week-long runs), with a
+#     high large-alloc report threshold so the console stays readable;
+#   - TF_CPP_MIN_LOG_LEVEL=4 to silence XLA's C++ chatter (the stream
+#     records are the observability channel, not stderr);
+#   - 8 fake host-platform devices + src on PYTHONPATH, exactly the
+#     tier-1 configuration (scripts/test.sh), so a fleet launched here
+#     runs the same compiled programs CI validated.
+#
+# With no arguments, runs the paper-grid capacity sweep with streaming
+# telemetry to FLEET_stream.jsonl — tail it live from another terminal:
+#
+#   PYTHONPATH=src python -m repro.obs.follow --follow   # capacity_report
+#
+# With arguments, execs `python "$@"` under the same hygiene, e.g.:
+#
+#   scripts/run_fleet.sh benchmarks/bench_fleet.py --preset smoke \
+#       --out BENCH_fleet.json --stream-out FLEET_stream.jsonl
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+for so in /usr/lib/x86_64-linux-gnu/libtcmalloc.so.4 \
+          /usr/lib/libtcmalloc.so.4 /usr/lib64/libtcmalloc.so.4; do
+    if [[ -e "$so" ]]; then
+        export LD_PRELOAD="$so${LD_PRELOAD:+:$LD_PRELOAD}"
+        export TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD=60000000000
+        break
+    fi
+done
+
+export TF_CPP_MIN_LOG_LEVEL="${TF_CPP_MIN_LOG_LEVEL:-4}"
+export XLA_FLAGS="--xla_force_host_platform_device_count=8 ${XLA_FLAGS:-}"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ $# -gt 0 ]]; then
+    exec python "$@"
+fi
+
+echo "run_fleet: streaming to FLEET_stream.jsonl" \
+     "(tail: PYTHONPATH=src python -m repro.obs.follow --follow)"
+exec python - <<'PY'
+from repro.fleet import capacity_report
+
+table = capacity_report(
+    {"paper_grid": ("pi1", "pi2", "pi3", "pi2_reg", "pi3_reg")},
+    rate_fracs=(0.85, 0.95), seeds=(0, 1), T=8192, chunk=512,
+    eps_b=0.05, stream_path="FLEET_stream.jsonl")
+for scen, entry in table["scenarios"].items():
+    for pol, row in entry["policies"].items():
+        print(f"{scen}/{pol}: useful={row['best_useful_rate']:.3f} "
+              f"bound={row['bound_exact']:.3f} "
+              f"eff={row['efficiency']:.3f}")
+print(f"run_fleet: done ({table.get('stream_records', 0)} stream records)")
+PY

@@ -111,6 +111,9 @@ class AtlasResult:
     dims: PadDims
     T: int
     chunk: int
+    stream_records: List[dict] = dataclasses.field(default_factory=list)
+                             # per-launch bisection progress
+                             # (sweep_lambda_max(stream=True), DESIGN.md §11)
 
     @property
     def launch_speedup(self) -> float:
@@ -140,8 +143,9 @@ def sweep_lambda_max(cells: Sequence[AtlasJob], *,
                      bracket: Tuple[float, float] = (0.5, 1.1),
                      max_calls: int = 24, early_stop: bool = True,
                      verdict: VerdictConfig | None = None,
-                     devices=None, dims: PadDims | None = None
-                     ) -> AtlasResult:
+                     devices=None, dims: PadDims | None = None,
+                     stream: bool = False, stream_log=None,
+                     stream_path: str | None = None) -> AtlasResult:
     """Bisect λ_max for every atlas cell, batched: one padded chunk-step
     launch per policy group advances all cells' current probes at once.
 
@@ -152,10 +156,20 @@ def sweep_lambda_max(cells: Sequence[AtlasJob], *,
     ``dims`` (`PadDims.of` over every cell's topology unless given).
     ``early_stop=True`` (default) harvests a probe as soon as all its
     lanes latch; ``False`` reproduces full-horizon probing (every probe
-    runs all ``n_chunks`` launches)."""
+    runs all ``n_chunks`` launches).
+
+    ``stream``/``stream_log``/``stream_path`` mirror `run_fleet`: one
+    "atlas"-kind record per chunk launch (DESIGN.md §11) — active/done
+    cell counts, harvested probes, per-family bracket medians — assembled
+    host-side from the scheduler state the loop already reads back, so
+    streaming cannot perturb the bisections.  Records land in
+    `AtlasResult.stream_records`; the stream clock ``t`` counts slots
+    *dispatched* per lane (lane carries reset t to 0 on probe rewrites,
+    so the raw carry clock is not monotone — the dispatch count is)."""
     cells = list(cells)
     if not cells:
         raise ValueError("empty atlas")
+    stream = stream or stream_log is not None or stream_path is not None
     seeds = tuple(seeds)
     vcfg = resolve_verdict(verdict, early_stop)
     devices = list(devices or jax.devices())
@@ -205,8 +219,12 @@ def sweep_lambda_max(cells: Sequence[AtlasJob], *,
     launch_slots_saved = 0
     n_step_compiles = 0
     eff_T = eff_chunk = 0
+    sink = None
+    if stream:
+        from repro.obs.emitter import StreamSink
+        sink = StreamSink(path=stream_path, log=stream_log)
 
-    for gkey, cidx in groups.items():
+    for g, (gkey, cidx) in enumerate(groups.items()):
         cfg = FleetJob(scenario=cells[cidx[0]].scenario,
                        policy=cells[cidx[0]].policy,
                        eps_b=cells[cidx[0]].eps_b,
@@ -276,11 +294,13 @@ def sweep_lambda_max(cells: Sequence[AtlasJob], *,
                                carry)
             n_rewrites += 1
 
+        g_launches = 0
         while active:
             lam = jnp.asarray(lam_host)
             keys = jax.vmap(jax.random.PRNGKey)(jnp.asarray(seed_host))
             carry = step_fn(pp, lam, eps, ak, ek, keys, carry)
             n_launches += 1
+            g_launches += 1
             for ci in active:
                 chunks_used[ci] += 1
 
@@ -341,12 +361,18 @@ def sweep_lambda_max(cells: Sequence[AtlasJob], *,
                 carry = rewrite_fn(pp, jnp.asarray(reset),
                                    jnp.asarray(park), carry)
                 n_rewrites += 1
+            if sink is not None:
+                sink.write(_atlas_record(
+                    g, g_launches, runner.chunk, B, cells, cidx, active,
+                    machines, steps, bounds, probes_of, verdicts[:B]))
 
         try:
             n_step_compiles += int(step_fn._cache_size())
         except Exception:  # pragma: no cover - private API moved
             n_step_compiles = -10 ** 6
 
+    if sink is not None:
+        sink.close()
     done_rows = [r for r in rows if r is not None]
     assert len(done_rows) == len(cells)
     return AtlasResult(
@@ -358,7 +384,47 @@ def sweep_lambda_max(cells: Sequence[AtlasJob], *,
         full_slots=sum(r.full_slots for r in done_rows),
         slots_saved=sum(r.slots_saved for r in done_rows),
         launch_slots_saved=launch_slots_saved,
-        dims=dims, T=eff_T, chunk=eff_chunk)
+        dims=dims, T=eff_T, chunk=eff_chunk,
+        stream_records=sink.records if sink is not None else [])
+
+
+def _atlas_record(group: int, g_launches: int, chunk: int, n_real: int,
+                  cells, cidx, active, machines, steps, bounds, probes_of,
+                  lane_verdicts: np.ndarray) -> dict:
+    """One launch's bisection-progress record, assembled from the host
+    scheduler state (DESIGN.md §11).  ``t`` is the per-lane dispatch count
+    (launches × chunk): lane carries reset their slot clock on probe
+    rewrites, so the carry's own t is not a usable stream clock."""
+    from repro.obs import schema
+
+    def rel(ci, k):
+        return k * steps[ci] / bounds[ci]
+
+    widths = [rel(ci, machines[ci].k_hi - machines[ci].k_lo)
+              for ci in cidx]
+    fams: Dict[str, dict] = {}
+    for ci in cidx:
+        fam = fams.setdefault(cells[ci].scenario, {"cells": 0, "done": 0,
+                                                   "_lo": [], "_hi": []})
+        fam["cells"] += 1
+        fam["done"] += ci not in active
+        fam["_lo"].append(rel(ci, machines[ci].k_lo))
+        fam["_hi"].append(rel(ci, machines[ci].k_hi))
+    for fam in fams.values():
+        fam["lo_med"] = round(float(np.median(fam.pop("_lo"))), 4)
+        fam["hi_med"] = round(float(np.median(fam.pop("_hi"))), 4)
+    v = lane_verdicts.astype(int)
+    return schema.make_record(
+        "atlas",
+        group=group, chunk=g_launches - 1, t=g_launches * chunk,
+        n_sims=n_real,
+        n_active_cells=len(active),
+        n_done_cells=len(cidx) - len(active),
+        n_probes=sum(len(probes_of[ci]) for ci in cidx),
+        bracket_rel_width_med=round(float(np.median(widths)), 4),
+        verdicts={VERDICT_NAMES[k]: int((v == k).sum())
+                  for k in sorted(set(v.tolist()))},
+        families=fams)
 
 
 def _finish_row(cell: AtlasJob, bound: float, step: float, bis: Bisection,

@@ -354,6 +354,25 @@ def _make_stream_runner(cfg: PolicyConfig, T: int, chunk: int,
     # loop needs per launch boundary — latched verdict + the slot it
     # latched at — without running `finalize` mid-flight.
     run.drift_of = lambda carry: (carry[2].verdict, carry[2].decided_at)
+
+    def probe(carry) -> Dict[str, jax.Array]:
+        """Telemetry tap (DESIGN.md §11): the windowed-rate / backlog /
+        drift leaves of the carry, as plain pytree indexing — no program,
+        so tapping cannot fork the compiled chunk step.  The emitter
+        differences consecutive probes into per-chunk stream records."""
+        state, stats, drift, _, t = carry
+        return {
+            "t": t,
+            "delivered_useful": state.delivered_useful,
+            "sum_queue": stats.sum_queue,
+            "max_queue": stats.max_queue,
+            "last_rate": drift.last_rate,
+            "last_drift": drift.last_drift,
+            "verdict": drift.verdict,
+            "decided_at": drift.decided_at,
+        }
+
+    run.probe = probe
     return run
 
 
@@ -404,6 +423,9 @@ class FleetResult:
     launch_slots_saved: int = 0   # device-level savings: slots in chunk
                                   # launches skipped once a whole group
                                   # decided (<= slots_saved)
+    stream_records: List[dict] = dataclasses.field(default_factory=list)
+                                  # per-chunk telemetry (run_fleet(stream=True),
+                                  # DESIGN.md §11), schema'd by repro.obs
 
     def column(self, name: str) -> np.ndarray:
         return np.array([m[name] for m in self.metrics])
@@ -524,7 +546,10 @@ def run_fleet(jobs: Sequence[FleetJob], T: int, chunk: int = 1024,
               dims: PadDims | None = None,
               memory_stats: bool = False,
               early_stop: bool = False,
-              verdict: VerdictConfig | None = None) -> FleetResult:
+              verdict: VerdictConfig | None = None,
+              stream: bool = False,
+              stream_log=None,
+              stream_path: str | None = None) -> FleetResult:
     """Run the whole sweep, one compiled program set per policy group.
 
     Each group runs as a Python-level loop of `n_chunks` launches of one
@@ -542,8 +567,18 @@ def run_fleet(jobs: Sequence[FleetJob], T: int, chunk: int = 1024,
     Per-sim savings land in each row's ``slots_saved`` (simulated slots
     never advanced past ``decided_at_slot``); launch-level savings — the
     chunks that were never dispatched — in ``FleetResult.launch_slots_saved``.
+
+    ``stream=True`` (implied by ``stream_log``/``stream_path``) turns on
+    the telemetry plane (DESIGN.md §11): after every chunk launch the
+    engine dispatches the carry's probe leaves through the io_callback
+    emitter — a separate tiny program, so the chunk step is byte-identical
+    to a telemetry-off run and all metrics stay bit-equal.  Records land
+    in ``FleetResult.stream_records``; ``stream_path`` additionally
+    appends them live as JSONL (tail with ``capacity_report --follow``)
+    and ``stream_log`` is called per record *on the callback thread*.
     """
     jobs = list(jobs)
+    stream = stream or stream_log is not None or stream_path is not None
     vcfg = resolve_verdict(verdict, early_stop)
     devices = list(devices or jax.devices())
     ndev = len(devices)
@@ -567,7 +602,11 @@ def run_fleet(jobs: Sequence[FleetJob], T: int, chunk: int = 1024,
     launch_saved = 0
     mem: Dict[str, float] | None = None
     mem_B = -1
-    for gkey, idxs in groups.items():
+    sink = None
+    if stream:
+        from repro.obs.emitter import StreamSink
+        sink = StreamSink(path=stream_path, log=stream_log)
+    for g, (gkey, idxs) in enumerate(groups.items()):
         cfg = jobs[idxs[0]].policy_config()
         runner = make_stream_runner(cfg, T, chunk=chunk, window=window,
                                     verdict=vcfg)
@@ -597,11 +636,21 @@ def run_fleet(jobs: Sequence[FleetJob], T: int, chunk: int = 1024,
             jnp.array([jobs[i].seed for i in padded_idxs], jnp.int32))
 
         init_fn, step_fn, fin_fn = make_group_launch(runner, mesh)
+        emitter = None
+        if sink is not None:
+            from repro.obs.emitter import ChunkEmitter
+            emitter = ChunkEmitter("fleet", group=g, n_real=B,
+                                   runner=runner, mesh=mesh, sink=sink)
         carry = init_fn(pp)
         launched = 0
         for _ in range(runner.n_chunks):
             carry = step_fn(pp, lam, eps, ak, ek, keys, carry)
             launched += 1
+            if emitter is not None:
+                # Dispatch the chunk-boundary telemetry probe *before* the
+                # next launch donates these carry buffers (DESIGN.md §11);
+                # non-blocking — records assemble on the callback thread.
+                emitter.emit(runner.probe(carry))
             if early_stop and launched < runner.n_chunks:
                 # Between-chunk readout of the [Bp] int32 verdict leaf —
                 # the mid-run readout the donated-carry structure permits.
@@ -617,12 +666,18 @@ def run_fleet(jobs: Sequence[FleetJob], T: int, chunk: int = 1024,
             if m is not None:
                 mem, mem_B = m, Bp
         out = jax.device_get(fin_fn(lam, eps, carry))
+        if emitter is not None:
+            emitter.close()       # flush in-flight records for this group
         for j, i in enumerate(idxs):
             metrics[i] = {k: float(v[j]) for k, v in out.items()}
 
+    if sink is not None:
+        sink.close()
     return FleetResult(jobs=jobs, metrics=metrics, n_programs=len(groups),
                        n_sims=len(jobs), dims=dims, T=eff_T, window=eff_win,
                        memory_stats=mem,
                        slots_saved=int(sum(m["slots_saved"]
                                            for m in metrics)),
-                       launch_slots_saved=launch_saved)
+                       launch_slots_saved=launch_saved,
+                       stream_records=sink.records if sink is not None
+                       else [])

@@ -290,7 +290,8 @@ def find_lambda_max(scenario: str, policy: str = "pi3", *,
                     bracket: Tuple[float, float] = (0.5, 1.1),
                     max_calls: int = 24, early_stop: bool = True,
                     verdict: VerdictConfig | None = None,
-                    devices=None, dims=None) -> FrontierResult:
+                    devices=None, dims=None,
+                    stream_log=None) -> FrontierResult:
     """Locate the empirical max sustainable rate λ_max of one (scenario,
     policy) pair by bisecting offered rate over early-stopped fleet runs.
 
@@ -301,8 +302,11 @@ def find_lambda_max(scenario: str, policy: str = "pi3", *,
     sustainable iff all of them latch STABLE.  ``dims`` optionally pins the
     padded topology dims (`batching.PadDims`) — the atlas equivalence tests
     pass the atlas-wide dims here so both paths run the identical padded
-    program.  See the module docstring for the quantization / seed-fold /
-    launch-only contract."""
+    program.  ``stream_log`` taps every probe's per-chunk telemetry
+    (DESIGN.md §11): it is handed to each `run_fleet` call, so records
+    restart their (group, chunk, t) clocks per probe — a live progress
+    feed, not one monotone stream (the atlas emits that).  See the module
+    docstring for the quantization / seed-fold / launch-only contract."""
     bound = policy_bound_exact(scenario, policy, eps_b, topo_seed=topo_seed)
     if bound <= 0.0:
         raise ValueError(f"{scenario}: exact LP bound is {bound}; "
@@ -333,7 +337,7 @@ def find_lambda_max(scenario: str, policy: str = "pi3", *,
                 for s in seeds]
         res = run_fleet(jobs, T=T, chunk=chunk, window=window,
                         early_stop=early_stop, verdict=verdict,
-                        devices=devices, dims=dims)
+                        devices=devices, dims=dims, stream_log=stream_log)
         launch_saved += res.launch_slots_saved
         names = res.verdicts()
         sustainable = all(v == "STABLE" for v in names)

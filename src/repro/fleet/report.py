@@ -163,7 +163,9 @@ def capacity_report(scenario_policies: Dict[str, Sequence[str]],
                     topo_seed: int = 0, devices=None,
                     eps_b: float = 0.01,
                     memory_stats: bool = False,
-                    early_stop: bool = False) -> dict:
+                    early_stop: bool = False,
+                    stream: bool = False, stream_log=None,
+                    stream_path: str | None = None) -> dict:
     """Run the sweep and assemble the capacity/efficiency table.
 
     Per-policy rows report both bounds — `bound_exact` (the per-(scenario,
@@ -173,6 +175,12 @@ def capacity_report(scenario_policies: Dict[str, Sequence[str]],
     (DESIGN.md §8); `early_stop=True` additionally freezes decided sims
     and stops chunk launches per group (frontier semantics — off by
     default so efficiency numbers stay full-horizon).
+
+    ``stream``/``stream_log``/``stream_path`` pass through to `run_fleet`
+    (DESIGN.md §11): per-chunk telemetry records are emitted while the
+    sweep is in flight — ``stream_path`` is what `scripts/run_fleet.sh`
+    wires so `capacity_report --follow` can tail the run — and the table
+    gains a ``stream_records`` count.
     """
     lam_star_of = {
         scen: exact_lam_star(scen, int(topo_seed), 1.0)
@@ -190,7 +198,9 @@ def capacity_report(scenario_policies: Dict[str, Sequence[str]],
     jobs = sweep_jobs(scenario_policies, rate_fracs, seeds,
                       topo_seed=topo_seed, eps_b=eps_b, exact=True)
     res = run_fleet(jobs, T=T, chunk=chunk, window=window, devices=devices,
-                    memory_stats=memory_stats, early_stop=early_stop)
+                    memory_stats=memory_stats, early_stop=early_stop,
+                    stream=stream, stream_log=stream_log,
+                    stream_path=stream_path)
 
     table: dict = {
         "T": res.T, "window": res.window,
@@ -202,6 +212,8 @@ def capacity_report(scenario_policies: Dict[str, Sequence[str]],
     }
     if res.memory_stats is not None:
         table["memory"] = res.memory_stats
+    if res.stream_records:
+        table["stream_records"] = len(res.stream_records)
     for scen, policies in scenario_policies.items():
         lam_star = lam_star_of[scen]
         entry = {"lam_star": lam_star, "policies": {}}

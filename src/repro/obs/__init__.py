@@ -1,0 +1,26 @@
+"""Streaming telemetry plane (DESIGN.md §11).
+
+`obs.schema` is the versioned stream-record contract every
+``*_stream.jsonl`` writer emits against; `obs.emitter` is the
+io_callback chunk-boundary transport the engines dispatch through; and
+`obs.follow` is the `capacity_report --follow` live view over the
+emitted files.  The schema and follow modules are pure Python — the CI
+gate (`scripts/check_stream.py`) and the viewer never import jax.
+"""
+from .schema import (BLESSED_DIGESTS, SCHEMA_VERSION, STREAM_KINDS,
+                     jsonl_line, make_record, read_stream_jsonl,
+                     schema_digest, validate_record, validate_stream,
+                     write_stream_jsonl)
+
+__all__ = [
+    "BLESSED_DIGESTS",
+    "SCHEMA_VERSION",
+    "STREAM_KINDS",
+    "jsonl_line",
+    "make_record",
+    "read_stream_jsonl",
+    "schema_digest",
+    "validate_record",
+    "validate_stream",
+    "write_stream_jsonl",
+]

@@ -1,0 +1,239 @@
+"""io_callback chunk-boundary telemetry emitter (DESIGN.md §11).
+
+The engines' chunk loops are Python-level drivers around donated
+`jit(shard_map(vmap(chunk_step)))` launches, so the natural place to tap
+telemetry is *between* launches — where the carry is a real pytree of
+device arrays — not inside the scan, where a per-slot callback would
+serialize the whole program behind host round-trips and fork the compiled
+chunk step.
+
+The transport is one tiny jitted program per mesh (`_emit_fn`): it takes
+an integer *handle* plus the probe leaves, replicates the leaves (so XLA
+does not warn about gathering sharded operands into the host callback),
+and hands them to `jax.experimental.io_callback(..., ordered=True)`.
+Three properties follow:
+
+  * **No program fork.**  The chunk-step program never changes — the tap
+    is pure pytree indexing on the carry plus a *separate* program, so
+    telemetry-on and telemetry-off runs execute byte-identical step
+    programs (asserted by `tests/test_obs.py` via the step jit cache).
+  * **Off the hot path.**  `emit()` only *dispatches*; the host never
+    blocks on the probe values.  Callbacks drain on JAX's background
+    callback thread; `jax.effects_barrier()` (inside `close()`) is the
+    flush point before results are read.
+  * **Donation-safe by dispatch order.**  The emit program is enqueued
+    *before* the next chunk launch that donates (aliases) the carry
+    buffers; per-device in-order execution on the CPU/TPU runtimes then
+    guarantees the read completes before the donated write lands — the
+    same ordering the engines' existing verdict readouts rely on.
+
+Handle routing keeps the program count at one per (mesh, leaf structure):
+every live `ChunkEmitter` registers its record-assembly callback in the
+module-level `_SINKS` table under a fresh handle, and the traced program
+only ever sees the integer.
+"""
+from __future__ import annotations
+
+import functools
+import itertools
+import threading
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import io_callback
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.queues import VERDICT_NAMES, VERDICT_UNDECIDED
+from . import schema
+
+#: handle -> per-emitter probe consumer (np leaves dict -> None).
+_SINKS: Dict[int, Callable] = {}
+_HANDLES = itertools.count(1)
+
+
+def _route(handle, leaves) -> None:
+    """The host side of the emit program: dispatch on the traced handle.
+
+    A missing handle is a closed emitter whose last callbacks were still
+    in flight — dropping them is correct (close() barriers first, so this
+    only happens on interpreter-teardown races)."""
+    sink = _SINKS.get(int(handle))
+    if sink is not None:
+        sink(leaves)
+
+
+@functools.lru_cache(maxsize=64)
+def _emit_fn(mesh: Mesh):
+    """The per-mesh emit program: replicate leaves, hand them to the
+    ordered io_callback.  Replication (`with_sharding_constraint` to
+    `P()`) is what lets the callback consume mesh-sharded probe leaves
+    without XLA's involuntary-rematerialization warning; `ordered=True`
+    keeps records in dispatch order, which is what makes the consecutive
+    probe *differencing* in the record assemblers correct."""
+    rep = NamedSharding(mesh, P())
+
+    @jax.jit
+    def emit(handle, leaves):
+        leaves = jax.tree_util.tree_map(
+            lambda v: jax.lax.with_sharding_constraint(v, rep), leaves)
+        io_callback(_route, None, handle, leaves, ordered=True)
+
+    return emit
+
+
+class StreamSink:
+    """Fan-out for finished records: accumulate, optionally append JSONL
+    to ``path`` (flushed per record, so a `--follow` tail sees them live),
+    optionally call ``log``.  Thread-safe: records arrive on the callback
+    thread."""
+
+    def __init__(self, path: str | None = None,
+                 log: Callable[[dict], None] | None = None):
+        self.records: List[dict] = []
+        self._f = open(path, "w") if path else None
+        self._log = log
+        self._lock = threading.Lock()
+
+    def write(self, rec: dict) -> None:
+        with self._lock:
+            self.records.append(rec)
+            if self._f is not None:
+                self._f.write(schema.jsonl_line(rec) + "\n")
+                self._f.flush()
+        if self._log is not None:
+            self._log(rec)
+
+    def close(self) -> None:
+        if self._f is not None:
+            self._f.close()
+            self._f = None
+
+
+class ChunkEmitter:
+    """One group's chunk-boundary telemetry: dispatch probe leaves per
+    chunk, difference consecutive probes into schema records on the
+    callback thread, hand them to a `StreamSink`.
+
+    ``kind`` picks the record assembler ("fleet" or "serving"); ``runner``
+    supplies chunk length and (for serving) the latency-histogram shape;
+    ``n_real`` slices mesh-padding replicas off before medians.
+    """
+
+    def __init__(self, kind: str, group: int, n_real: int, runner,
+                 mesh: Mesh, sink: StreamSink):
+        self._assemble = {"fleet": _fleet_record,
+                          "serving": _serving_record}[kind]
+        self._group = group
+        self._n_real = n_real
+        self._runner = runner
+        self._sink = sink
+        self._prev: dict | None = None
+        self._chunk_idx = 0
+        self._emit = _emit_fn(mesh)
+        self._handle = next(_HANDLES)
+        _SINKS[self._handle] = self._consume
+        self._handle_arr = jax.device_put(jnp.int32(self._handle),
+                                          NamedSharding(mesh, P()))
+
+    def emit(self, leaves: Dict[str, jax.Array]) -> None:
+        """Dispatch one chunk-boundary probe (non-blocking).  Must be
+        called before the next donating launch consumes the carry the
+        leaves alias — i.e. immediately after the step launch returns."""
+        self._emit(self._handle_arr, leaves)
+
+    def _consume(self, leaves) -> None:
+        probe = {k: np.asarray(v) for k, v in leaves.items()}
+        rec = self._assemble(self._group, self._chunk_idx, self._runner,
+                             probe, self._prev, self._n_real)
+        self._prev = probe
+        self._chunk_idx += 1
+        self._sink.write(rec)
+
+    def close(self) -> None:
+        """Flush in-flight callbacks, then unregister the handle."""
+        jax.effects_barrier()
+        _SINKS.pop(self._handle, None)
+
+
+def _r4(x) -> float:
+    return round(float(x), 4)
+
+
+def _verdict_counts(verdict: np.ndarray) -> dict:
+    v = verdict.astype(int)
+    return {VERDICT_NAMES[k]: int((v == k).sum())
+            for k in sorted(set(v.tolist()))}
+
+
+def _fleet_record(group: int, chunk_idx: int, runner, probe: dict,
+                  prev: dict | None, n_real: int) -> dict:
+    """Difference two consecutive fleet probes into one windowed record.
+
+    Rates are per-sim deltas over the sim's *own* slot delta (a frozen
+    sim advances 0 slots; its last anchored rate/drift still reports), so
+    early-stopped groups stream honest numbers."""
+    def cur(name):
+        return probe[name][:n_real].astype(np.float64)
+
+    def delta(name):
+        if prev is None:
+            return cur(name)
+        return cur(name) - prev[name][:n_real].astype(np.float64)
+
+    dt = np.maximum(delta("t"), 1.0)
+    verdict = probe["verdict"][:n_real]
+    return schema.make_record(
+        "fleet",
+        group=group, chunk=chunk_idx,
+        t=int(probe["t"][:n_real].max()), n_sims=n_real,
+        useful_rate_med=_r4(np.median(delta("delivered_useful") / dt)),
+        backlog_med=_r4(np.median(delta("sum_queue") / dt)),
+        max_queue_med=_r4(np.median(cur("max_queue"))),
+        drift_med=_r4(np.median(cur("last_drift"))),
+        n_decided=int((verdict != VERDICT_UNDECIDED).sum()),
+        verdicts=_verdict_counts(verdict))
+
+
+def _hist_quantile(hist: np.ndarray, q: float, horizon: int,
+                   n_bins: int) -> np.ndarray:
+    """Host-side `core.latency.latency_quantiles` on [B, NB+1] numpy data."""
+    total = hist.sum(axis=-1, keepdims=True)
+    cum = np.cumsum(hist, axis=-1)
+    bin_w = max(horizon // n_bins, 1)
+    b = np.sum(cum < q * total, axis=-1)
+    edge = np.minimum((b + 1) * bin_w, horizon).astype(np.float64)
+    return np.where(total[..., 0] > 0, edge, 0.0)
+
+
+def _serving_record(group: int, chunk_idx: int, runner, probe: dict,
+                    prev: dict | None, n_real: int) -> dict:
+    """The PR-6 serving record, emitted against the shared schema.
+
+    Medians are across the group's *real* sims (mesh-padding replicas are
+    sliced off); all values rounded so records diff cleanly in CI.
+    """
+    def delta(name):
+        cur = probe[name][:n_real].astype(np.float64)
+        if prev is None:
+            return cur
+        return cur - prev[name][:n_real].astype(np.float64)
+
+    ddlv = delta("delivered_useful")
+    dadm = delta("admitted_total")
+    dshed = delta("shed_total")
+    doff = np.maximum(dadm + dshed, 1e-9)
+    dhist = delta("hist")
+    p99 = _hist_quantile(dhist, 0.99, runner.lat_horizon, runner.lat_bins)
+    return schema.make_record(
+        "serving",
+        group=group, chunk=chunk_idx,
+        t=int(probe["t"][:n_real].max()), n_sims=n_real,
+        qps_med=_r4(np.median(ddlv) / runner.chunk),
+        admitted_qps_med=_r4(np.median(dadm) / runner.chunk),
+        shed_frac_med=_r4(np.median(dshed / doff)),
+        p99_med=_r4(np.median(p99)),
+        gate_open_frac=_r4(np.mean(probe["gate"][:n_real])),
+        gate_flips=int(probe["gate_flips"][:n_real].sum()),
+        verdicts=_verdict_counts(probe["verdict"][:n_real]))

@@ -9,14 +9,16 @@ scenario's *event* model (capacity perturbations) is per-job traced data
 exactly as in the fleet; the scenario's arrival model is superseded by the
 job's `TraceSpec` (live query traffic is what serving is about).
 
-Between chunk launches the engine reads back a small probe of the carry
+Between chunk launches the engine dispatches a small probe of the carry
 (cumulative delivered/admitted/shed, gate, verdict, the latency histogram)
-and differences consecutive probes into *windowed* per-chunk records —
-delivered QPS, shed fraction, p99 sojourn, verdict counts, each a median
-across the group's sims.  With ``stream=True`` these land in
-`ServingResult.stream_records`, one dict per chunk boundary, ready to be
-written as JSONL (`serving.report.write_stream_jsonl`) — the seed of the
-streaming-observability path (ROADMAP).
+through the telemetry plane's io_callback emitter (`repro.obs.emitter`,
+DESIGN.md §11), which differences consecutive probes into *windowed*
+per-chunk records — delivered QPS, shed fraction, p99 sojourn, verdict
+counts, each a median across the group's sims — validated against the
+versioned stream schema (`repro.obs.schema`).  With ``stream=True`` these
+land in `ServingResult.stream_records`, one dict per chunk boundary,
+ready to be written as JSONL (`serving.report.write_stream_jsonl`);
+``stream_path`` appends them live for `capacity_report --follow`.
 """
 from __future__ import annotations
 
@@ -101,72 +103,24 @@ def _probe_launch(runner, mesh: Mesh):
                              check_rep=False))
 
 
-def _hist_quantile(hist: np.ndarray, q: float, horizon: int,
-                   n_bins: int) -> np.ndarray:
-    """Host-side `core.latency.latency_quantiles` on [B, NB+1] numpy data."""
-    total = hist.sum(axis=-1, keepdims=True)
-    cum = np.cumsum(hist, axis=-1)
-    bin_w = max(horizon // n_bins, 1)
-    b = np.sum(cum < q * total, axis=-1)
-    edge = np.minimum((b + 1) * bin_w, horizon).astype(np.float64)
-    return np.where(total[..., 0] > 0, edge, 0.0)
-
-
-def _stream_record(group: int, chunk_idx: int, runner, probe: dict,
-                   prev: dict | None, n_real: int) -> dict:
-    """Difference two consecutive probes into one windowed JSONL record.
-
-    Medians are across the group's *real* sims (mesh-padding replicas are
-    sliced off); all values rounded so records diff cleanly in CI.
-    """
-    def delta(name):
-        cur = probe[name][:n_real].astype(np.float64)
-        if prev is None:
-            return cur
-        return cur - prev[name][:n_real].astype(np.float64)
-
-    ddlv = delta("delivered_useful")
-    dadm = delta("admitted_total")
-    dshed = delta("shed_total")
-    doff = np.maximum(dadm + dshed, 1e-9)
-    dhist = delta("hist")
-    p99 = _hist_quantile(dhist, 0.99, runner.lat_horizon, runner.lat_bins)
-    verdict = probe["verdict"][:n_real].astype(int)
-    def r4(x):
-        return round(float(x), 4)
-
-    return {
-        "group": group,
-        "chunk": chunk_idx,
-        "t": int(probe["t"][:n_real].max()),
-        "n_sims": n_real,
-        "qps_med": r4(np.median(ddlv) / runner.chunk),
-        "admitted_qps_med": r4(np.median(dadm) / runner.chunk),
-        "shed_frac_med": r4(np.median(dshed / doff)),
-        "p99_med": r4(np.median(p99)),
-        "gate_open_frac": r4(np.mean(probe["gate"][:n_real])),
-        "gate_flips": int(probe["gate_flips"][:n_real].sum()),
-        "verdicts": {VERDICT_NAMES[v]: int((verdict == v).sum())
-                     for v in sorted(set(verdict.tolist()))},
-    }
-
-
 def run_serving(jobs: Sequence[ServingJob], T: int, chunk: int = 512,
                 window: int | None = None, devices=None,
                 dims: PadDims | None = None,
                 verdict: VerdictConfig | None = None,
                 admission: AdmissionConfig | None = None,
                 stream: bool = False,
-                stream_log: Callable[[dict], None] | None = None
-                ) -> ServingResult:
+                stream_log: Callable[[dict], None] | None = None,
+                stream_path: str | None = None) -> ServingResult:
     """Run every serving job, one compiled program set per (policy, trace)
     group, with per-chunk streaming records when ``stream`` is on.
 
-    ``stream_log`` (implies ``stream``) is called once per record as it is
-    produced — wire it to `serving.report.jsonl_line` for live output.
+    ``stream_log``/``stream_path`` (each implies ``stream``) mirror
+    `fleet.run_fleet`: records are assembled off the hot path on the
+    io_callback thread (DESIGN.md §11) — ``stream_log`` is invoked there,
+    and ``stream_path`` appends JSONL live for `capacity_report --follow`.
     """
     jobs = list(jobs)
-    stream = stream or stream_log is not None
+    stream = stream or stream_log is not None or stream_path is not None
     devices = list(devices or jax.devices())
     ndev = len(devices)
     mesh = Mesh(np.array(devices), ("fleet",))
@@ -184,8 +138,11 @@ def run_serving(jobs: Sequence[ServingJob], T: int, chunk: int = 512,
         groups.setdefault(_group_key(job), []).append(i)
 
     metrics: List[Dict[str, float] | None] = [None] * len(jobs)
-    records: List[dict] = []
     eff_T = eff_win = 0
+    sink = None
+    if stream:
+        from repro.obs.emitter import StreamSink
+        sink = StreamSink(path=stream_path, log=stream_log)
     for g, (gkey, idxs) in enumerate(groups.items()):
         job0 = jobs[idxs[0]]
         cfg = job0.policy_config()
@@ -210,26 +167,32 @@ def run_serving(jobs: Sequence[ServingJob], T: int, chunk: int = 512,
 
         init_fn, step_fn, fin_fn = make_group_launch(runner, mesh,
                                                      n_step_args=6)
-        probe_fn = _probe_launch(runner, mesh) if stream else None
+        probe_fn = emitter = None
+        if sink is not None:
+            from repro.obs.emitter import ChunkEmitter
+            probe_fn = _probe_launch(runner, mesh)
+            emitter = ChunkEmitter("serving", group=g, n_real=B,
+                                   runner=runner, mesh=mesh, sink=sink)
         carry = init_fn(pp)
-        prev = None
         for ci in range(runner.n_chunks):
             carry = step_fn(pp, lam, eps, ek, keys, carry)
-            if probe_fn is not None:
-                p = {k: np.asarray(v)
-                     for k, v in jax.device_get(probe_fn(carry)).items()}
-                rec = _stream_record(g, ci, runner, p, prev, B)
-                records.append(rec)
-                if stream_log is not None:
-                    stream_log(rec)
-                prev = p
+            if emitter is not None:
+                # The probe launch reduces the carry to small [Bp] leaves
+                # (read-only, no donation); the emitter dispatches them to
+                # the callback thread without blocking the chunk loop.
+                emitter.emit(probe_fn(carry))
         out = jax.device_get(fin_fn(lam, eps, carry))
+        if emitter is not None:
+            emitter.close()       # flush in-flight records for this group
         for j, i in enumerate(idxs):
             metrics[i] = {
                 k: (float(v[j]) if np.ndim(v[j]) == 0
                     else np.asarray(v[j]).astype(float).tolist())
                 for k, v in out.items()}
 
+    if sink is not None:
+        sink.close()
     return ServingResult(jobs=jobs, metrics=metrics, n_programs=len(groups),
                          n_sims=len(jobs), dims=dims, T=eff_T, window=eff_win,
-                         stream_records=records)
+                         stream_records=sink.records if sink is not None
+                         else [])

@@ -9,13 +9,15 @@ serving`).
 """
 from __future__ import annotations
 
-import json
 from typing import Sequence
 
 import numpy as np
 
 from repro.fleet.engine import VerdictConfig
 from repro.fleet.report import policy_bound_exact
+# Canonical JSONL helpers live in the telemetry plane's schema module
+# (DESIGN.md §11); re-exported here so PR-6 call sites keep working.
+from repro.obs.schema import jsonl_line, write_stream_jsonl  # noqa: F401
 from .admission import AdmissionConfig
 from .engine import ServingJob, ServingResult, run_serving
 
@@ -78,17 +80,3 @@ def _verdict_names(metrics) -> list:
     return [VERDICT_NAMES[int(m["verdict"])] for m in metrics]
 
 
-def jsonl_line(record: dict) -> str:
-    """One stream record as a canonical JSONL line (sorted keys, so CI
-    diffs are order-stable)."""
-    return json.dumps(record, sort_keys=True)
-
-
-def write_stream_jsonl(result_or_records, path: str) -> int:
-    """Write a run's per-chunk stream records as JSONL; returns the count."""
-    records = getattr(result_or_records, "stream_records",
-                      result_or_records)
-    with open(path, "w") as f:
-        for rec in records:
-            f.write(jsonl_line(rec) + "\n")
-    return len(records)

@@ -1,0 +1,249 @@
+"""Telemetry-plane tests (DESIGN.md §11): the versioned stream-record
+schema, observer-effect freedom (telemetry-on runs bit-identical to
+telemetry-off across fleet/serving/atlas, including early stop), the
+no-recompilation contract (the emit program must not fork the compiled
+chunk step), and the `capacity_report --follow` renderer."""
+import json
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.fleet import (FleetJob, make_group_launch, make_stream_runner,
+                         registry_cells, resolve_verdict, run_fleet,
+                         sweep_lambda_max)
+from repro.obs import emitter as obs_emitter
+from repro.obs import schema
+from repro.obs.follow import RollingMedian, follow, render
+from repro.serving import ServingJob, run_serving
+
+
+def _fleet_rec(chunk=0, t=64, **over):
+    fields = dict(group=0, chunk=chunk, t=t, n_sims=4,
+                  useful_rate_med=0.5, backlog_med=0.1, max_queue_med=3.0,
+                  drift_med=-0.01, n_decided=1,
+                  verdicts={"STABLE": 1, "UNDECIDED": 3})
+    fields.update(over)
+    return schema.make_record("fleet", **fields)
+
+
+# ---------------------------------------------------------------------------
+# Schema: versioning, typed field tables, monotone clocks
+# ---------------------------------------------------------------------------
+
+class TestSchema:
+    def test_digest_is_blessed(self):
+        """Editing a field table without bumping SCHEMA_VERSION (and
+        blessing the new digest) must trip scripts/check_stream.py."""
+        assert schema.BLESSED_DIGESTS[schema.SCHEMA_VERSION] == \
+            schema.schema_digest()
+
+    def test_make_record_valid(self):
+        rec = _fleet_rec()
+        assert rec["schema_version"] == schema.SCHEMA_VERSION
+        assert rec["kind"] == "fleet"
+        assert schema.validate_record(rec) == []
+        # records are plain JSON: a round trip is exact
+        assert json.loads(schema.jsonl_line(rec)) == rec
+
+    def test_make_record_rejects_missing_and_unknown(self):
+        with pytest.raises(ValueError, match="missing"):
+            schema.make_record("fleet", group=0, chunk=0, t=1, n_sims=1)
+        with pytest.raises(ValueError, match="bump SCHEMA_VERSION"):
+            _fleet_rec(bogus_field=1.0)
+
+    def test_validate_catches_type_and_version_drift(self):
+        rec = _fleet_rec()
+        bad = dict(rec, useful_rate_med="fast")
+        assert any("useful_rate_med" in e for e in
+                   schema.validate_record(bad))
+        old = dict(rec, schema_version=schema.SCHEMA_VERSION + 1)
+        assert any("schema_version" in e for e in
+                   schema.validate_record(old))
+
+    def test_validate_stream_monotone_clocks(self):
+        ok = [_fleet_rec(chunk=c, t=64 * (c + 1)) for c in range(3)]
+        assert schema.validate_stream(ok) == []
+        # a frozen group may repeat t (non-decreasing), but never rewind
+        flat = [_fleet_rec(chunk=0, t=64), _fleet_rec(chunk=1, t=64)]
+        assert schema.validate_stream(flat) == []
+        rewound = [_fleet_rec(chunk=0, t=128), _fleet_rec(chunk=1, t=64)]
+        assert any("t" in e for e in schema.validate_stream(rewound))
+        stuck = [_fleet_rec(chunk=1, t=64), _fleet_rec(chunk=1, t=128)]
+        assert any("chunk" in e for e in schema.validate_stream(stuck))
+
+    def test_jsonl_roundtrip_and_truncation(self, tmp_path):
+        recs = [_fleet_rec(chunk=c, t=64 * (c + 1)) for c in range(4)]
+        path = tmp_path / "s_stream.jsonl"
+        n = schema.write_stream_jsonl(recs, str(path))
+        assert n == 4
+        assert schema.read_stream_jsonl(str(path)) == recs
+        # a writer mid-append leaves a truncated last line; the reader
+        # must keep the complete prefix instead of crashing
+        with open(path, "a") as f:
+            f.write('{"kind": "fl')
+        assert schema.read_stream_jsonl(str(path)) == recs
+
+
+# ---------------------------------------------------------------------------
+# Observer-effect freedom: telemetry-on is bit-identical to telemetry-off
+# ---------------------------------------------------------------------------
+
+FLEET_JOBS = [FleetJob(scenario=scen, policy="pi3_reg", lam=lam,
+                       eps_b=0.05, seed=s)
+              for scen, lam in (("paper_grid", 4.0), ("ge_grid", 3.0))
+              for s in (0, 1)]
+
+
+def _assert_metrics_identical(off, on):
+    assert len(off) == len(on)
+    for m0, m1 in zip(off, on):
+        assert set(m0) == set(m1)
+        for k in m0:
+            assert m0[k] == m1[k], (k, m0[k], m1[k])
+
+
+@pytest.mark.fleet_smoke
+class TestObserverEffect:
+    def test_fleet_stream_bit_identical(self, tmp_path):
+        off = run_fleet(FLEET_JOBS, T=512, chunk=128)
+        path = tmp_path / "FLEET_stream.jsonl"
+        on = run_fleet(FLEET_JOBS, T=512, chunk=128, stream_path=str(path))
+        _assert_metrics_identical(off.metrics, on.metrics)
+        assert off.stream_records == []
+        # one record per (group, chunk launch), all schema-valid
+        assert len(on.stream_records) == off.n_programs * (512 // 128)
+        assert schema.validate_stream(on.stream_records) == []
+        assert schema.read_stream_jsonl(str(path)) == on.stream_records
+
+    def test_fleet_early_stop_stream_bit_identical(self):
+        off = run_fleet(FLEET_JOBS, T=2048, chunk=256, early_stop=True)
+        on = run_fleet(FLEET_JOBS, T=2048, chunk=256, early_stop=True,
+                       stream=True)
+        _assert_metrics_identical(off.metrics, on.metrics)
+        assert off.slots_saved == on.slots_saved
+        assert off.launch_slots_saved == on.launch_slots_saved
+        assert schema.validate_stream(on.stream_records) == []
+        # the stream mirrors exactly the launches that happened — one
+        # record per launch, contiguous chunk indices, no phantom records
+        # past a group's early exit
+        by_group = {}
+        for r in on.stream_records:
+            by_group.setdefault(r["group"], []).append(r["chunk"])
+        assert len(by_group) == off.n_programs
+        for chunks in by_group.values():
+            assert chunks == list(range(len(chunks)))
+            assert len(chunks) <= 2048 // 256
+        assert any(r["n_decided"] > 0 for r in on.stream_records)
+
+    def test_serving_stream_bit_identical(self, tmp_path):
+        jobs = [ServingJob(trace="bursty", lam=3.0, seed=s) for s in (0, 1)]
+        off = run_serving(jobs, T=512, chunk=128)
+        path = tmp_path / "SERVING_stream.jsonl"
+        on = run_serving(jobs, T=512, chunk=128, stream_path=str(path))
+        _assert_metrics_identical(off.metrics, on.metrics)
+        assert schema.validate_stream(on.stream_records) == []
+        assert schema.read_stream_jsonl(str(path)) == on.stream_records
+
+    def test_atlas_stream_bit_identical(self, tmp_path):
+        cells = registry_cells(("paper_grid", "ring"), topo_seeds=(0, 1),
+                               eps_b=0.05)
+        kw = dict(seeds=(0,), T=512, chunk=256, rel_tol=0.1, max_calls=4)
+        off = sweep_lambda_max(cells, **kw)
+        path = tmp_path / "ATLAS_stream.jsonl"
+        on = sweep_lambda_max(cells, **kw, stream_path=str(path))
+        assert off.stream_records == []
+        for r0, r1 in zip(off.rows, on.rows):
+            assert (r0.lam_max, r0.lo, r0.hi, r0.n_calls) == \
+                (r1.lam_max, r1.lo, r1.hi, r1.n_calls)
+        assert (off.n_launches, off.n_programs) == \
+            (on.n_launches, on.n_programs)
+        assert on.stream_records, "atlas sweep emitted no records"
+        assert schema.validate_stream(on.stream_records) == []
+        assert schema.read_stream_jsonl(str(path)) == on.stream_records
+        # the atlas clock is the dispatch clock (g_launches x chunk),
+        # monotone even though lane carries reset t on probe rewrites
+        for r in on.stream_records:
+            assert r["t"] == (r["chunk"] + 1) * 256
+
+
+# ---------------------------------------------------------------------------
+# No recompilation: the emit program must not fork the chunk step
+# ---------------------------------------------------------------------------
+
+@pytest.mark.fleet_smoke
+class TestNoRecompilation:
+    def test_stream_does_not_fork_step_program(self):
+        """Telemetry taps the carry with a *separate* jitted program; the
+        donated chunk-step program must stay at exactly one compilation
+        across off-then-on runs of the same policy group."""
+        # a threshold unique to this test keeps the memoized runner/launch
+        # caches from aliasing other tests' entries
+        jobs = [FleetJob(scenario="paper_grid", policy="pi3bar", lam=2.0,
+                         threshold=0.071293, seed=s) for s in (0, 1)]
+        run_fleet(jobs, T=256, chunk=64)
+        res = run_fleet(jobs, T=256, chunk=64, stream=True)
+        assert len(res.stream_records) == 4
+        runner = make_stream_runner(jobs[0].policy_config(), T=256,
+                                    chunk=64, window=None,
+                                    verdict=resolve_verdict(None, False))
+        mesh = Mesh(np.array(jax.devices()), ("fleet",))
+        _, step_fn, _ = make_group_launch(runner, mesh)
+        assert step_fn._cache_size() == 1, (
+            f"telemetry forked the chunk step: {step_fn._cache_size()} "
+            "compilations")
+
+    def test_emitter_handles_unregistered_after_close(self, tmp_path):
+        before = dict(obs_emitter._SINKS)
+        res = run_fleet([FleetJob(scenario="paper_grid", policy="pi3",
+                                  lam=2.0, seed=0)],
+                        T=256, chunk=64,
+                        stream_path=str(tmp_path / "f_stream.jsonl"))
+        assert res.stream_records
+        assert obs_emitter._SINKS == before, (
+            "ChunkEmitter.close() leaked handles")
+
+
+# ---------------------------------------------------------------------------
+# The follow renderer (capacity_report)
+# ---------------------------------------------------------------------------
+
+class TestFollow:
+    def test_rolling_median_window(self):
+        rm = RollingMedian(window=3)
+        for x in (1.0, 100.0, 2.0, 3.0, 4.0):
+            rm.push(x)
+        assert rm.value == 3.0          # 100.0 aged out of the window
+        assert len(rm) == 3
+        assert RollingMedian(2).value == 0.0
+
+    def test_render_fleet_and_bad_records(self):
+        recs = [_fleet_rec(chunk=c, t=64 * (c + 1)) for c in range(3)]
+        out = render(recs)
+        assert "fleet" in out and "STABLE:1" in out
+        out = render(recs + [dict(recs[0], useful_rate_med="fast",
+                                  chunk=9)])
+        assert "failed schema validation" in out
+        assert render([]) == "(no records yet)"
+
+    def test_render_stream_log_callback_records(self):
+        """The live path: run_fleet(stream_log=...) delivers the same
+        records the result carries, render-ready, on the callback thread."""
+        seen = []
+        res = run_fleet([FleetJob(scenario="paper_grid", policy="pi3",
+                                  lam=2.0, seed=0)],
+                        T=256, chunk=64, stream_log=seen.append)
+        assert seen == res.stream_records
+        assert "fleet" in render(seen)
+
+    def test_follow_renders_files_once(self, tmp_path, capsys):
+        path = tmp_path / "x_stream.jsonl"
+        schema.write_stream_jsonl(
+            [_fleet_rec(chunk=c, t=64 * (c + 1)) for c in range(2)],
+            str(path))
+        lines = []
+        ticks = follow([str(path)], interval=0.0, max_ticks=1,
+                       out=lines.append)
+        assert ticks == 1
+        assert "fleet" in lines[0] and str(path) in lines[0]
