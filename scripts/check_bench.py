@@ -97,6 +97,8 @@ EFFICIENCY_GATES = _BENCH.EFFICIENCY_GATES
 FRONTIER_RATIO_BAND = _BENCH.FRONTIER_RATIO_BAND
 #: minimum aggregate early-stop slot savings across the frontier smoke.
 FRONTIER_MIN_SAVED_FRAC = _BENCH.FRONTIER_MIN_SAVED_FRAC
+#: checkpoint-on us_per_sim ceiling vs plain, as a fraction (DESIGN.md §12).
+RESILIENCE_MAX_OVERHEAD = _BENCH.RESILIENCE_MAX_OVERHEAD
 
 
 def iter_rows(table: dict):
@@ -379,6 +381,25 @@ def check(current: dict, baseline: dict, mode: str = "auto") -> list[str]:
             errors.append(f"frontier: early stop saved only {frac:.1%} of "
                           f"simulated slots "
                           f"(< {FRONTIER_MIN_SAVED_FRAC:.0%})")
+
+    # --- 6. resilience overhead (DESIGN.md §12): chunk-boundary
+    # checkpointing must be nearly free (snapshot-before-donate is a pure
+    # host read; disk writes are backgrounded).  A timing gate, so it
+    # honors CHECK_BENCH_SKIP_TIMING like every other wall-clock check.
+    resilience = current.get("resilience")
+    if resilience and os.environ.get("CHECK_BENCH_SKIP_TIMING", "0") != "1":
+        frac = resilience.get("overhead_frac")
+        print(f"check_bench: resilience checkpoint overhead "
+              f"{'missing' if frac is None else format(frac, '+.3f')} "
+              f"(gate <= {RESILIENCE_MAX_OVERHEAD})")
+        if frac is None:
+            errors.append("resilience section missing overhead_frac")
+        elif frac > RESILIENCE_MAX_OVERHEAD:
+            errors.append(
+                f"resilience: checkpoint-on us_per_sim overhead "
+                f"{frac:+.1%} > {RESILIENCE_MAX_OVERHEAD:.0%} "
+                f"(plain={resilience.get('us_per_sim_plain'):.0f}us "
+                f"ckpt={resilience.get('us_per_sim_ckpt'):.0f}us)")
 
     # --- memory delta: informational only
     cur_mem = (current.get("memory") or {}).get("peak_bytes")

@@ -19,9 +19,17 @@ Files passed explicitly must exist; with no arguments the script globs
 ``*_stream.jsonl`` in the repo root and soft-passes when none are there
 (the benches that emit them may have been skipped).
 
+With ``--resumed``, each file is additionally checked as the merged feed
+of a preemption-safe run (DESIGN.md §12): it must carry at least one
+``resume`` record, and stripping the resume seam markers must leave a
+stream that still validates — i.e. the resumed writer's dedupe produced
+exactly the uninterrupted record sequence, with no duplicate and no
+time-traveling record across the seam.
+
 Usage:
   python scripts/check_stream.py SERVING_stream.jsonl FLEET_stream.jsonl
   python scripts/check_stream.py            # glob *_stream.jsonl
+  python scripts/check_stream.py --resumed RESUMED_stream.jsonl
 """
 from __future__ import annotations
 
@@ -36,7 +44,7 @@ sys.path.insert(0, str(REPO / "src"))
 from repro.obs import schema  # noqa: E402  (path bootstrap above)
 
 
-def check_file(path: str) -> list[str]:
+def check_file(path: str, resumed: bool = False) -> list[str]:
     errs: list[str] = []
     records = []
     with open(path) as f:
@@ -51,6 +59,13 @@ def check_file(path: str) -> list[str]:
     if not records and not errs:
         errs.append(f"{path}: no records")
     errs.extend(f"{path}: {e}" for e in schema.validate_stream(records))
+    if resumed and not errs:
+        seams = [r for r in records if r.get("kind") == "resume"]
+        if not seams:
+            errs.append(f"{path}: --resumed but no resume record")
+        spliced = [r for r in records if r.get("kind") != "resume"]
+        errs.extend(f"{path} (resume seam stripped): {e}"
+                    for e in schema.validate_stream(spliced))
     return errs
 
 
@@ -69,7 +84,9 @@ def main(argv: list[str]) -> int:
             f"{digest} but BLESSED_DIGESTS[{schema.SCHEMA_VERSION}] = "
             f"{blessed}. Bump SCHEMA_VERSION and bless the new digest.")
 
-    paths = argv[1:]
+    args = argv[1:]
+    resumed = "--resumed" in args
+    paths = [a for a in args if a != "--resumed"]
     if not paths:
         paths = sorted(glob.glob(str(REPO / "*_stream.jsonl")))
         if not paths:
@@ -83,7 +100,7 @@ def main(argv: list[str]) -> int:
         if not pathlib.Path(p).exists():
             errors.append(f"{p}: missing (was its bench skipped?)")
             continue
-        errs = check_file(p)
+        errs = check_file(p, resumed=resumed)
         errors.extend(errs)
         if not errs:
             n_records += sum(1 for _ in open(p))

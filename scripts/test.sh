@@ -28,13 +28,18 @@
 #   - a serving smoke: bursty queries through the admission gate
 #     (DESIGN.md §9) must deliver >= 0.9x the exact LP bound with the
 #     gate open and nothing shed;
+#   - a resume smoke: a fault-injected SIGTERM mid-atlas, then a resume
+#     from CKPT_resume_smoke/ that must be bit-exact (identical rows and
+#     launch accounting, zero extra step compiles) with a validating
+#     spliced stream (scripts/check_stream.py --resumed, DESIGN.md §12);
 #   - the bench gate: benchmarks/bench_fleet.py --preset smoke emits
 #     BENCH_fleet.json (incl. the xla-vs-pallas backend section and the
 #     frontier lam_max section) and scripts/check_bench.py fails on >25%
 #     us/sim regression vs the committed BENCH_baseline.json, any
 #     efficiency gate breach (DESIGN.md §6), any xla/pallas parity diff,
-#     a frontier ratio outside [0.90, 1.0], or <30% early-stop savings
-#     (DESIGN.md §8);
+#     a frontier ratio outside [0.90, 1.0], <30% early-stop savings
+#     (DESIGN.md §8), or >5% checkpoint-on us/sim overhead in the
+#     resilience section (DESIGN.md §12);
 #   - the serving bench gate: benchmarks/bench_serving.py emits
 #     BENCH_serving.json + SERVING_stream.jsonl and scripts/check_bench.py
 #     --mode serving gates delivered-QPS/bound, shedding, p99 sojourn,
@@ -167,6 +172,46 @@ qps = [m["delivered_qps"] for m in res.metrics]
 print(f"serving_smoke: pi3_reg/bursty qps={min(qps):.2f}..{max(qps):.2f} "
       f"vs bound={bound:.1f} (gate open, 0 shed) ok")
 PY3
+
+# resume_smoke: the preemption-safety contract (DESIGN.md §12) end-to-end
+# in one process — a mid-atlas SIGTERM (FaultPlane.preempt_after) lands a
+# durable snapshot, and the resumed sweep must reproduce the uninterrupted
+# run bit-for-bit: identical rows (brackets, verdicts, λ_max), identical
+# launch accounting, and ZERO extra step compiles (the memoized launch
+# builders hand the resume its already-compiled programs).  The spliced
+# stream must carry the resume seam and still validate with it stripped.
+rm -rf CKPT_resume_smoke RESUME_stream.jsonl
+python - <<'PY5'
+from repro.fleet import registry_cells, sweep_lambda_max
+from repro.runtime.fault import FaultPlane, Preempted
+from repro.runtime.resilience import ResilienceConfig
+
+cells = registry_cells(("paper_grid", "ring"), topo_seeds=(0,), eps_b=0.05)
+kw = dict(seeds=(0, 1), T=512, chunk=256, rel_tol=0.1, max_calls=4)
+base = sweep_lambda_max(cells, **kw)
+
+kill = ResilienceConfig(checkpoint_dir="CKPT_resume_smoke",
+                        fault_plane=FaultPlane.preempt_after(3))
+try:
+    sweep_lambda_max(cells, **kw, resilience=kill,
+                     stream_path="RESUME_stream.jsonl")
+    raise SystemExit("resume_smoke: expected Preempted")
+except Preempted:
+    pass
+
+res = sweep_lambda_max(cells, **kw, stream_path="RESUME_stream.jsonl",
+                       resilience=ResilienceConfig(
+                           checkpoint_dir="CKPT_resume_smoke"))
+assert res.resumed_from == 3, res.resumed_from
+assert res.rows == base.rows, "resume is not bit-exact"
+assert res.n_launches == base.n_launches, (res.n_launches, base.n_launches)
+assert res.n_step_compiles == base.n_step_compiles, \
+    (res.n_step_compiles, base.n_step_compiles)
+print(f"resume_smoke: killed at launch 3/{base.n_launches}, resumed "
+      f"bit-exact ({res.n_cells} cells, {res.n_step_compiles} step "
+      f"compiles, 0 extra) ok")
+PY5
+python scripts/check_stream.py --resumed RESUME_stream.jsonl
 
 # Pallas parity suite, re-run under an explicit CPU platform pin: the
 # fused slot kernels (DESIGN.md §7) must be bit-identical to the XLA

@@ -1,3 +1,3 @@
-from .checkpointer import Checkpointer
+from .checkpointer import CheckpointCorruption, Checkpointer
 
-__all__ = ["Checkpointer"]
+__all__ = ["CheckpointCorruption", "Checkpointer"]

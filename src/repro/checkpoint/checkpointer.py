@@ -1,14 +1,25 @@
 """Fault-tolerant checkpointing: atomic manifests, keep-last-k, background
-save thread, restore-with-resharding.
+save thread, restore-with-resharding, per-leaf integrity checksums.
 
 Layout:  <dir>/step_<N>/ {manifest.json, arr_<i>.npy ...}
-Writes go to a tmp dir, fsync'd, then os.replace()'d into place — a crash
-mid-save never corrupts the latest checkpoint.  Arrays are saved as FULL
-(unsharded) numpy, so a restore may re-shard onto ANY mesh — this is the
-elastic-scaling path: lose a host, rebuild a smaller mesh, restore, resume.
+Writes go to a tmp dir (manifest fsync'd), then os.replace()'d into place
+— a crash mid-save never corrupts the latest checkpoint.  The manifest
+carries a sha256 per array, verified on restore, so a torn write (power
+loss after the rename was queued but before data blocks hit disk) is
+*detected* rather than silently resumed from; `restore(..., fallback=True)`
+then walks back to the newest intact step instead of crashing.  Arrays are
+saved as FULL (unsharded) numpy, so a restore may re-shard onto ANY mesh
+— this is the elastic-scaling path: lose a host, rebuild a smaller mesh,
+restore, resume.
+
+Beyond the array pytree, a checkpoint can carry an ``extra`` JSON payload
+(host-side scheduler state: bisection machines, emitter clocks, finished
+metrics — see `runtime/resilience.py`, DESIGN.md §12); it lives inside
+the manifest, so it is covered by the same atomic-publish guarantee.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
@@ -21,6 +32,21 @@ import jax
 import numpy as np
 
 
+class CheckpointCorruption(RuntimeError):
+    """A checkpoint step exists on disk but fails integrity verification
+    (missing arrays, checksum mismatch, unreadable manifest)."""
+
+
+def _sha256(a: np.ndarray) -> str:
+    # Hash dtype+shape+bytes: a reinterpreted or reshaped array must not
+    # collide with the original.
+    h = hashlib.sha256()
+    h.update(str(a.dtype).encode())
+    h.update(str(a.shape).encode())
+    h.update(np.ascontiguousarray(a).tobytes())
+    return h.hexdigest()
+
+
 class Checkpointer:
     def __init__(self, directory: str | Path, keep: int = 3):
         self.dir = Path(directory)
@@ -30,19 +56,23 @@ class Checkpointer:
 
     # ---- save -------------------------------------------------------------
 
-    def save(self, step: int, state: Any, blocking: bool = True) -> None:
+    def save(self, step: int, state: Any, blocking: bool = True,
+             extra: dict | None = None) -> None:
         """Snapshot to host memory synchronously; write to disk (optionally
-        in the background so the train loop keeps stepping)."""
+        in the background so the train loop keeps stepping).  ``extra`` is
+        an arbitrary JSON-serializable payload published atomically with
+        the arrays (inside the manifest)."""
         flat, treedef = jax.tree_util.tree_flatten(state)
         host = [np.asarray(x) for x in flat]      # device -> host snapshot
         if self._thread is not None:
             self._thread.join()                   # one in-flight save max
             self._thread = None
         if blocking:
-            self._write(step, host, treedef)
+            self._write(step, host, treedef, extra)
         else:
             self._thread = threading.Thread(
-                target=self._write, args=(step, host, treedef), daemon=True)
+                target=self._write, args=(step, host, treedef, extra),
+                daemon=True)
             self._thread.start()
 
     def wait(self) -> None:
@@ -50,7 +80,19 @@ class Checkpointer:
             self._thread.join()
             self._thread = None
 
-    def _write(self, step: int, host: list, treedef) -> None:
+    def _write(self, step: int, host: list, treedef,
+               extra: dict | None = None) -> None:
+        """Atomic publish: arrays + manifest land in a tmp dir, then one
+        `os.replace` renames the whole step into place — a reader never
+        observes a partially-written step directory, and a crash mid-write
+        leaves only a `.tmp_*` dir the next save removes.  Only the
+        manifest is fsync'd: per-array fsync would cost ~ms per leaf per
+        boundary, and the checkpoint contract doesn't need it — process
+        preemption (the fault model of DESIGN.md §12) can't tear
+        page-cache writes, and a literal power loss that does tear array
+        data is *detected* by the per-array sha256 on restore, which then
+        falls back to the newest intact step (at most one snapshot
+        interval lost, never the run)."""
         final = self.dir / f"step_{step:08d}"
         tmp = self.dir / f".tmp_step_{step:08d}_{os.getpid()}"
         if tmp.exists():
@@ -59,9 +101,13 @@ class Checkpointer:
         manifest = {"step": step, "n_arrays": len(host),
                     "treedef": str(treedef), "time": time.time(),
                     "dtypes": [str(a.dtype) for a in host],
-                    "shapes": [list(a.shape) for a in host]}
+                    "shapes": [list(a.shape) for a in host],
+                    "sha256": [_sha256(a) for a in host],
+                    "extra": extra}
         for i, a in enumerate(host):
-            np.save(tmp / f"arr_{i}.npy", a)
+            with open(tmp / f"arr_{i}.npy", "wb") as f:
+                np.save(f, a)
+                f.flush()
         with open(tmp / "manifest.json", "w") as f:
             json.dump(manifest, f)
             f.flush()
@@ -89,18 +135,69 @@ class Checkpointer:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def restore(self, like: Any, step: Optional[int] = None,
-                shardings: Any = None) -> Any:
-        """Restore into the structure of `like`; if `shardings` is given,
-        arrays are placed with those NamedShardings (re-sharding onto the
-        current — possibly different — mesh)."""
+    def _load_verified(self, step: int) -> tuple[dict, list[np.ndarray]]:
+        """Read one step's manifest + arrays, verifying per-leaf sha256.
+
+        Raises `CheckpointCorruption` on any integrity failure so callers
+        can fall back to an older step."""
+        d = self.dir / f"step_{step:08d}"
+        try:
+            manifest = json.loads((d / "manifest.json").read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            raise CheckpointCorruption(f"{d}: unreadable manifest ({e})")
+        arrays: list[np.ndarray] = []
+        sums = manifest.get("sha256")
+        for i in range(manifest["n_arrays"]):
+            p = d / f"arr_{i}.npy"
+            try:
+                a = np.load(p)
+            except (OSError, ValueError) as e:
+                raise CheckpointCorruption(f"{p}: unreadable array ({e})")
+            if sums is not None:        # pre-checksum checkpoints: skip
+                if _sha256(a) != sums[i]:
+                    raise CheckpointCorruption(
+                        f"{p}: sha256 mismatch (torn write / bit rot)")
+            arrays.append(a)
+        return manifest, arrays
+
+    def extra(self, step: Optional[int] = None) -> dict | None:
+        """The ``extra`` JSON payload of a step (default: latest)."""
         step = step if step is not None else self.latest_step()
-        assert step is not None, f"no checkpoints in {self.dir}"
+        if step is None:
+            return None
         d = self.dir / f"step_{step:08d}"
         manifest = json.loads((d / "manifest.json").read_text())
+        return manifest.get("extra")
+
+    def restore(self, like: Any, step: Optional[int] = None,
+                shardings: Any = None, fallback: bool = False) -> Any:
+        """Restore into the structure of `like`; if `shardings` is given,
+        arrays are placed with those NamedShardings (re-sharding onto the
+        current — possibly different — mesh).
+
+        Every array's sha256 is verified against the manifest.  With
+        ``fallback=True`` a corrupt or partial step is skipped and the
+        next-newest intact step is restored instead (the preemption-safe
+        contract of DESIGN.md §12: a crash mid-publish must cost at most
+        one snapshot interval, never the run); without it, corruption
+        raises `CheckpointCorruption`."""
+        steps = ([step] if step is not None
+                 else sorted(self.all_steps(), reverse=True))
+        assert steps, f"no checkpoints in {self.dir}"
+        last_err: Exception | None = None
+        for s in steps:
+            try:
+                manifest, arrays = self._load_verified(s)
+                break
+            except CheckpointCorruption as e:
+                last_err = e
+                if not fallback:
+                    raise
+        else:
+            raise CheckpointCorruption(
+                f"no intact checkpoint in {self.dir}: {last_err}")
         flat_like, treedef = jax.tree_util.tree_flatten(like)
         assert manifest["n_arrays"] == len(flat_like), "structure mismatch"
-        arrays = [np.load(d / f"arr_{i}.npy") for i in range(len(flat_like))]
         for a, l in zip(arrays, flat_like):
             assert tuple(a.shape) == tuple(l.shape), (a.shape, l.shape)
         if shardings is not None:
@@ -108,3 +205,19 @@ class Checkpointer:
             arrays = [jax.device_put(a, s)
                       for a, s in zip(arrays, flat_sh)]
         return jax.tree_util.tree_unflatten(treedef, arrays)
+
+    def restored_step(self, step: Optional[int] = None,
+                      fallback: bool = False) -> Optional[int]:
+        """The step `restore` would actually load: ``step`` (or the
+        latest) unless fallback walks past corruption.  None if nothing
+        intact exists."""
+        steps = ([step] if step is not None
+                 else sorted(self.all_steps(), reverse=True))
+        for s in steps:
+            try:
+                self._load_verified(s)
+                return s
+            except CheckpointCorruption:
+                if not fallback:
+                    raise
+        return None

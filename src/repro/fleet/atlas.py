@@ -90,6 +90,10 @@ class AtlasRow:
     full_slots: int          # slots a freeze-free search would have run
     slots_saved: int         # full_slots - total_slots
     probes: Tuple[RateProbe, ...]
+    degraded: bool = False   # the cell's lanes sat on a dropped host: the
+                             # search was cut short and (lo, hi) is the
+                             # bracket *at the dropout*, not a converged
+                             # localization (DESIGN.md §12)
 
 
 @dataclasses.dataclass
@@ -114,6 +118,13 @@ class AtlasResult:
     stream_records: List[dict] = dataclasses.field(default_factory=list)
                              # per-launch bisection progress
                              # (sweep_lambda_max(stream=True), DESIGN.md §11)
+    resumed_from: int | None = None   # checkpoint step this sweep restored
+                                      # (DESIGN.md §12); None = fresh
+    degraded: Dict[int, str] = dataclasses.field(default_factory=dict)
+                             # cell index -> reason for cells parked by a
+                             # host dropout (their rows carry degraded=True)
+    recovery_plan: object | None = None   # runtime.fault.RecoveryPlan
+    n_fault_retries: int = 0
 
     @property
     def launch_speedup(self) -> float:
@@ -145,7 +156,8 @@ def sweep_lambda_max(cells: Sequence[AtlasJob], *,
                      verdict: VerdictConfig | None = None,
                      devices=None, dims: PadDims | None = None,
                      stream: bool = False, stream_log=None,
-                     stream_path: str | None = None) -> AtlasResult:
+                     stream_path: str | None = None,
+                     resilience=None) -> AtlasResult:
     """Bisect λ_max for every atlas cell, batched: one padded chunk-step
     launch per policy group advances all cells' current probes at once.
 
@@ -165,7 +177,17 @@ def sweep_lambda_max(cells: Sequence[AtlasJob], *,
     streaming cannot perturb the bisections.  Records land in
     `AtlasResult.stream_records`; the stream clock ``t`` counts slots
     *dispatched* per lane (lane carries reset t to 0 on probe rewrites,
-    so the raw carry clock is not monotone — the dispatch count is)."""
+    so the raw carry clock is not monotone — the dispatch count is).
+
+    ``resilience`` makes the sweep preemption-safe (DESIGN.md §12): every
+    launch boundary snapshots the donated carry *and* the host scheduler —
+    each cell's serialized `Bisection` machine, `RateProbe` history,
+    pending (rate, seed) lane tables and the launch counters — so a killed
+    sweep resumes with bit-identical brackets, rows and stream records.
+    Host dropouts park the affected cells' lanes and finish their rows
+    from the current bracket with ``degraded=True`` (reported in
+    ``AtlasResult.degraded``) while the rest of the atlas keeps bisecting.
+    """
     cells = list(cells)
     if not cells:
         raise ValueError("empty atlas")
@@ -214,15 +236,44 @@ def sweep_lambda_max(cells: Sequence[AtlasJob], *,
                                          topo_seed=c.topo_seed))
         groups.setdefault(key, []).append(ci)
 
+    rt = resumed = None
+    if resilience is not None:
+        from repro.runtime import resilience as rz
+        rt = rz.maybe_resilient(resilience, "atlas", cells=tuple(cells),
+                                seeds=seeds, T=T, chunk=chunk, window=window,
+                                rel_tol=rel_tol, bracket=tuple(bracket),
+                                max_calls=max_calls, early_stop=early_stop,
+                                verdict=vcfg, dims=dims, ndev=ndev)
+        resumed = rt.resumed
+
     rows: List[AtlasRow | None] = [None] * len(cells)
     n_launches = seq_launches = n_rewrites = 0
     launch_slots_saved = 0
     n_step_compiles = 0
     eff_T = eff_chunk = 0
+    degraded: Dict[int, str] = {}
+    recovery = None
     sink = None
     if stream:
         from repro.obs.emitter import StreamSink
-        sink = StreamSink(path=stream_path, log=stream_log)
+        sink = StreamSink(path=stream_path, log=stream_log,
+                          append=resumed is not None)
+    if resumed is not None:
+        # Host scheduler restore: every cell's machine (cells in already-
+        # finished groups carry their final state; unstarted ones their
+        # initial state — both re-serialize identically), finished rows,
+        # and the launch counters.
+        for ci_s, ms in resumed["machines"].items():
+            machines[int(ci_s)] = Bisection.from_state(ms)
+        for ci_s, rs in resumed["rows"].items():
+            rows[int(ci_s)] = rz.row_restore(rs)
+        n_launches = resumed["n_launches"]
+        seq_launches = resumed["seq_launches"]
+        n_rewrites = resumed["n_rewrites"]
+        launch_slots_saved = resumed["launch_slots_saved"]
+        n_step_compiles = resumed["n_step_compiles"]
+        degraded = {int(k): v for k, v in resumed["degraded"].items()}
+        recovery = rz.plan_restore(resumed["recovery"])
 
     for g, (gkey, cidx) in enumerate(groups.items()):
         cfg = FleetJob(scenario=cells[cidx[0]].scenario,
@@ -233,6 +284,8 @@ def sweep_lambda_max(cells: Sequence[AtlasJob], *,
                                     verdict=vcfg)
         eff_T, eff_chunk = runner.T, runner.chunk
         n_chunks = runner.n_chunks
+        if resumed is not None and g < resumed["group"]:
+            continue              # finished pre-kill: rows restored above
 
         # Lane layout: S contiguous lanes per cell, mesh-padded by
         # repeating the last real lane (run_fleet's replica convention —
@@ -275,30 +328,63 @@ def sweep_lambda_max(cells: Sequence[AtlasJob], *,
             seed_host[sl] = [fold_seed(cells[ci].topo_seed, k, 0, s)
                              for s in seeds]
 
-        carry = init_fn(pp)
-        park0 = np.zeros(Bp, bool)
-        for ci in cidx:
-            k = machines[ci].next_rate_index()
-            if k is None:           # degenerate budget: decided probe-free
-                rows[ci] = _finish_row(cells[ci], bounds[ci], steps[ci],
-                                       machines[ci], [])
-                park0[lane_of[ci]] = True
-            else:
-                active.add(ci)
-                _assign(ci, k)
-        lam_host[B:] = lam_host[B - 1]
-        seed_host[B:] = seed_host[B - 1]
-        park0[B:] = park0[B - 1]
-        if park0.any():
-            carry = rewrite_fn(pp, jnp.zeros(Bp, bool), jnp.asarray(park0),
-                               carry)
-            n_rewrites += 1
+        resume_here = resumed is not None and g == resumed["group"]
+        if resume_here and resumed["g_launches"] > 0:
+            # Mid-group restore: the carry at the snapshot boundary plus
+            # the lane tables / pending probes exactly as the killed sweep
+            # left them; machines/rows/counters were restored above.
+            pending = {int(k): v for k, v in resumed["pending"].items()}
+            chunks_used = {int(k): v
+                           for k, v in resumed["chunks_used"].items()}
+            for ci_s, ps in resumed["probes"].items():
+                probes_of[int(ci_s)] = [rz.probe_restore(p) for p in ps]
+            lam_host = np.array(resumed["lam_host"], np.float32)
+            seed_host = np.array(resumed["seed_host"], np.int32)
+            active = set(resumed["active"])
+            like = jax.eval_shape(init_fn, pp)
+            carry = rt.restore_carry(like, mesh)
+            g_launches = resumed["g_launches"]
+        else:
+            carry = init_fn(pp)
+            park0 = np.zeros(Bp, bool)
+            for ci in cidx:
+                k = machines[ci].next_rate_index()
+                if k is None:       # degenerate budget: decided probe-free
+                    rows[ci] = _finish_row(cells[ci], bounds[ci], steps[ci],
+                                           machines[ci], [])
+                    park0[lane_of[ci]] = True
+                else:
+                    active.add(ci)
+                    _assign(ci, k)
+            lam_host[B:] = lam_host[B - 1]
+            seed_host[B:] = seed_host[B - 1]
+            park0[B:] = park0[B - 1]
+            if park0.any():
+                carry = rewrite_fn(pp, jnp.zeros(Bp, bool),
+                                   jnp.asarray(park0), carry)
+                n_rewrites += 1
+            g_launches = 0
+        if sink is not None and resume_here:
+            from repro.obs import schema
+            sink.write(schema.make_record(
+                "resume", group=g, chunk=g_launches,
+                t=g_launches * runner.chunk, n_sims=B, engine="atlas",
+                ckpt_step=resumed["ckpt_step"],
+                n_preloaded=sink.n_preloaded))
 
-        g_launches = 0
         while active:
             lam = jnp.asarray(lam_host)
             keys = jax.vmap(jax.random.PRNGKey)(jnp.asarray(seed_host))
-            carry = step_fn(pp, lam, eps, ak, ek, keys, carry)
+            if rt is not None:
+                try:
+                    carry = rt.launch(g, n_launches, step_fn, pp, lam, eps,
+                                      ak, ek, keys, carry)
+                except Exception:
+                    if sink is not None:
+                        sink.close()
+                    raise
+            else:
+                carry = step_fn(pp, lam, eps, ak, ek, keys, carry)
             n_launches += 1
             g_launches += 1
             for ci in active:
@@ -312,6 +398,34 @@ def sweep_lambda_max(cells: Sequence[AtlasJob], *,
             reset = np.zeros(Bp, bool)
             park = np.zeros(Bp, bool)
             changed = False
+            if rt is not None:
+                dead = rt.dead_hosts(n_launches)
+                if dead:
+                    # Graceful degradation: park every active cell with a
+                    # lane on a dead host, finish its row from the bracket
+                    # *at the dropout* (degraded=True, never silent), and
+                    # re-plan the mesh.  The rest of the atlas keeps
+                    # bisecting.
+                    lane_dead = rz.host_lane_mask(Bp, ndev, dead)
+                    per = Bp // ndev
+                    for ci in sorted(active):
+                        sl = lane_of[ci]
+                        if lane_dead[sl].any():
+                            active.discard(ci)
+                            park[sl] = True
+                            rows[ci] = _finish_row(
+                                cells[ci], bounds[ci], steps[ci],
+                                machines[ci], probes_of[ci], degraded=True)
+                            hosts = sorted({l // per
+                                            for l in range(sl.start, sl.stop)
+                                            if lane_dead[l]})
+                            degraded[ci] = "host_dropout:" + ",".join(
+                                f"host{h}" for h in hosts)
+                            changed = True
+                    if recovery is None or set(dead) != set(recovery.evict):
+                        from repro.runtime.fault import plan_recovery
+                        recovery = plan_recovery(
+                            ndev, 1, [f"host{h}" for h in dead], [], 1)
             for ci in sorted(active):
                 sl = lane_of[ci]
                 v = verdicts[sl]
@@ -366,10 +480,34 @@ def sweep_lambda_max(cells: Sequence[AtlasJob], *,
                     g, g_launches, runner.chunk, B, cells, cidx, active,
                     machines, steps, bounds, probes_of, verdicts[:B]))
 
+            if rt is not None and rt.should_snapshot(n_launches):
+                rt.snapshot(n_launches, carry, _atlas_extra(
+                    g, g_launches, n_launches, seq_launches, n_rewrites,
+                    launch_slots_saved, n_step_compiles, machines, rows,
+                    pending, chunks_used, probes_of, cidx, lam_host,
+                    seed_host, active, degraded, recovery))
+            if rt is not None:
+                try:
+                    rt.maybe_preempt(n_launches)
+                except Exception:
+                    if sink is not None:
+                        sink.close()
+                    raise
+
         try:
             n_step_compiles += int(step_fn._cache_size())
         except Exception:  # pragma: no cover - private API moved
             n_step_compiles = -10 ** 6
+
+        if rt is not None and rt.should_snapshot(n_launches):
+            # Group-end marker: empty carry, cursor at the next group's
+            # start — a resume here re-enters the fresh path with the
+            # restored machines re-pulling the same deterministic grid.
+            rt.snapshot(n_launches, (), _atlas_extra(
+                g + 1, 0, n_launches, seq_launches, n_rewrites,
+                launch_slots_saved, n_step_compiles, machines, rows,
+                {}, {}, {ci: [] for ci in cidx}, cidx, lam_host,
+                seed_host, set(), degraded, recovery))
 
     if sink is not None:
         sink.close()
@@ -385,7 +523,44 @@ def sweep_lambda_max(cells: Sequence[AtlasJob], *,
         slots_saved=sum(r.slots_saved for r in done_rows),
         launch_slots_saved=launch_slots_saved,
         dims=dims, T=eff_T, chunk=eff_chunk,
-        stream_records=sink.records if sink is not None else [])
+        stream_records=sink.records if sink is not None else [],
+        resumed_from=(resumed["n_launches"] if resumed is not None
+                      else None),
+        degraded=degraded, recovery_plan=recovery,
+        n_fault_retries=rt.n_retries if rt is not None else 0)
+
+
+def _atlas_extra(group, g_launches, n_launches, seq_launches, n_rewrites,
+                 launch_slots_saved, n_step_compiles, machines, rows,
+                 pending, chunks_used, probes_of, cidx, lam_host,
+                 seed_host, active, degraded, recovery) -> dict:
+    """JSON-serializable sweep cursor for one checkpoint (DESIGN.md §12).
+
+    Machines and finished rows are global (every cell, so already-finished
+    groups restore without replay); the lane tables and pending probes are
+    the current group's only."""
+    from repro.runtime import resilience as rz
+
+    return {
+        "group": group, "g_launches": g_launches,
+        "n_launches": n_launches, "seq_launches": seq_launches,
+        "n_rewrites": n_rewrites,
+        "launch_slots_saved": launch_slots_saved,
+        "n_step_compiles": n_step_compiles,
+        "machines": {str(ci): m.to_state()
+                     for ci, m in enumerate(machines)},
+        "rows": {str(ci): rz.row_state(r)
+                 for ci, r in enumerate(rows) if r is not None},
+        "pending": {str(ci): int(k) for ci, k in pending.items()},
+        "chunks_used": {str(ci): int(n) for ci, n in chunks_used.items()},
+        "probes": {str(ci): [rz.probe_state(p) for p in probes_of[ci]]
+                   for ci in cidx},
+        "lam_host": [float(x) for x in lam_host],
+        "seed_host": [int(x) for x in seed_host],
+        "active": sorted(int(ci) for ci in active),
+        "degraded": {str(ci): v for ci, v in degraded.items()},
+        "recovery": rz.plan_state(recovery),
+    }
 
 
 def _atlas_record(group: int, g_launches: int, chunk: int, n_real: int,
@@ -428,7 +603,8 @@ def _atlas_record(group: int, g_launches: int, chunk: int, n_real: int,
 
 
 def _finish_row(cell: AtlasJob, bound: float, step: float, bis: Bisection,
-                probes: Sequence[RateProbe]) -> AtlasRow:
+                probes: Sequence[RateProbe],
+                degraded: bool = False) -> AtlasRow:
     full = sum(p.slots_run + p.slots_saved for p in probes)
     run_slots = sum(p.slots_run for p in probes)
     return AtlasRow(
@@ -443,4 +619,4 @@ def _finish_row(cell: AtlasJob, bound: float, step: float, bis: Bisection,
                     else bis.k_hi_certain * step),
         total_slots=run_slots, full_slots=full,
         slots_saved=full - run_slots,
-        probes=tuple(probes))
+        probes=tuple(probes), degraded=degraded)

@@ -46,6 +46,8 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.runtime.fault import RecoveryPlan, plan_recovery
+
 from repro.core.graph import ComputeProblem
 from repro.core.policies import PolicyConfig, slot_step
 from repro.core.queues import (DriftStats, VERDICT_NAMES, VERDICT_STABLE,
@@ -426,6 +428,16 @@ class FleetResult:
     stream_records: List[dict] = dataclasses.field(default_factory=list)
                                   # per-chunk telemetry (run_fleet(stream=True),
                                   # DESIGN.md §11), schema'd by repro.obs
+    resumed_from: int | None = None    # checkpoint step this run restored
+                                       # (None = started fresh), DESIGN.md §12
+    degraded: Dict[int, str] = dataclasses.field(default_factory=dict)
+                                  # job index -> reason for jobs whose lanes
+                                  # were parked by a host dropout: their
+                                  # metrics reflect a truncated sim and must
+                                  # not be read as converged (degraded, not
+                                  # silent)
+    recovery_plan: RecoveryPlan | None = None  # re-plan for the dropout
+    n_fault_retries: int = 0      # transient launch failures absorbed
 
     def column(self, name: str) -> np.ndarray:
         return np.array([m[name] for m in self.metrics])
@@ -549,7 +561,8 @@ def run_fleet(jobs: Sequence[FleetJob], T: int, chunk: int = 1024,
               verdict: VerdictConfig | None = None,
               stream: bool = False,
               stream_log=None,
-              stream_path: str | None = None) -> FleetResult:
+              stream_path: str | None = None,
+              resilience=None) -> FleetResult:
     """Run the whole sweep, one compiled program set per policy group.
 
     Each group runs as a Python-level loop of `n_chunks` launches of one
@@ -576,6 +589,14 @@ def run_fleet(jobs: Sequence[FleetJob], T: int, chunk: int = 1024,
     in ``FleetResult.stream_records``; ``stream_path`` additionally
     appends them live as JSONL (tail with ``capacity_report --follow``)
     and ``stream_log`` is called per record *on the callback thread*.
+
+    ``resilience`` (a `runtime.resilience.ResilienceConfig`) makes the run
+    preemption-safe (DESIGN.md §12): the donated carry + host cursor are
+    snapshotted at chunk boundaries (before the next launch donates the
+    buffers), a killed run resumes bit-exact from the newest intact
+    checkpoint, injected launch failures retry with bounded backoff, and
+    host dropouts park the dead lanes via `make_sim_rewriter` — surfaced
+    in ``FleetResult.degraded``/``recovery_plan`` rather than aborting.
     """
     jobs = list(jobs)
     stream = stream or stream_log is not None or stream_path is not None
@@ -597,82 +618,191 @@ def run_fleet(jobs: Sequence[FleetJob], T: int, chunk: int = 1024,
     for i, job in enumerate(jobs):
         groups.setdefault(_policy_group_key(job), []).append(i)
 
+    rt = resumed = None
+    if resilience is not None:
+        from repro.runtime.resilience import (host_lane_mask as
+                                              _host_lane_mask,
+                                              maybe_resilient)
+        rt = maybe_resilient(resilience, "fleet", jobs=tuple(jobs), T=T,
+                             chunk=chunk, window=window, verdict=vcfg,
+                             early_stop=early_stop, dims=dims, ndev=ndev)
+        resumed = rt.resumed
+
     metrics: List[Dict[str, float] | None] = [None] * len(jobs)
     eff_T = eff_win = 0
     launch_saved = 0
+    glaunch = 0                    # launches completed, across groups — the
+                                   # checkpoint step / fault-plane clock
+    degraded: Dict[int, str] = {}
+    recovery = None
     mem: Dict[str, float] | None = None
     mem_B = -1
     sink = None
     if stream:
         from repro.obs.emitter import StreamSink
-        sink = StreamSink(path=stream_path, log=stream_log)
-    for g, (gkey, idxs) in enumerate(groups.items()):
-        cfg = jobs[idxs[0]].policy_config()
-        runner = make_stream_runner(cfg, T, chunk=chunk, window=window,
-                                    verdict=vcfg)
-        eff_T, eff_win = runner.T, runner.window
-
-        # Per-group host work is hoisted to exactly here — one batch of
-        # device constants per group, built *before* the chunk loop.  Pad
-        # the group batch to a multiple of the mesh size by repeating the
-        # last job; replicas are dropped when results are scattered back.
-        B = len(idxs)
-        Bp = -(-B // ndev) * ndev
-        padded_idxs = idxs + [idxs[-1]] * (Bp - B)
-        pp = jax.tree_util.tree_map(
-            lambda *xs: jnp.stack(xs),
-            *[padded_of[(jobs[i].scenario, jobs[i].topo_seed)]
-              for i in padded_idxs])
-        lam = jnp.array([jobs[i].lam for i in padded_idxs], jnp.float32)
-        eps = jnp.array([jobs[i].eps_b for i in padded_idxs], jnp.float32)
-        ak = jnp.array([arrival_code(get_scenario(jobs[i].scenario).arrival)
-                        for i in padded_idxs], jnp.int32)
-        ek = jnp.array([event_code(get_scenario(jobs[i].scenario).events)
-                        for i in padded_idxs], jnp.int32)
-        # One vmapped derivation instead of B host-side PRNGKey calls.
-        # int32 keeps negative seeds legal (uint32 would overflow at the
-        # host conversion); PRNGKey folds them identically either way.
-        keys = jax.vmap(jax.random.PRNGKey)(
-            jnp.array([jobs[i].seed for i in padded_idxs], jnp.int32))
-
-        init_fn, step_fn, fin_fn = make_group_launch(runner, mesh)
-        emitter = None
-        if sink is not None:
-            from repro.obs.emitter import ChunkEmitter
-            emitter = ChunkEmitter("fleet", group=g, n_real=B,
-                                   runner=runner, mesh=mesh, sink=sink)
-        carry = init_fn(pp)
-        launched = 0
-        for _ in range(runner.n_chunks):
-            carry = step_fn(pp, lam, eps, ak, ek, keys, carry)
-            launched += 1
-            if emitter is not None:
-                # Dispatch the chunk-boundary telemetry probe *before* the
-                # next launch donates these carry buffers (DESIGN.md §11);
-                # non-blocking — records assemble on the callback thread.
-                emitter.emit(runner.probe(carry))
-            if early_stop and launched < runner.n_chunks:
-                # Between-chunk readout of the [Bp] int32 verdict leaf —
-                # the mid-run readout the donated-carry structure permits.
-                # All sims (mesh-padding replicas mirror a real job)
-                # decided => the remaining chunks would only shuffle
-                # frozen bits; stop dispatching them.
-                v = np.asarray(jax.device_get(runner.verdict_of(carry)))
-                if np.all(v != VERDICT_UNDECIDED):
-                    break
-        launch_saved += len(idxs) * (runner.n_chunks - launched) * runner.chunk
-        if memory_stats and Bp > mem_B:
-            m = _memory_analysis(step_fn, (pp, lam, eps, ak, ek, keys, carry))
+        sink = StreamSink(path=stream_path, log=stream_log,
+                          append=resumed is not None)
+    if resumed is not None:
+        from repro.runtime.resilience import metrics_restore, plan_restore
+        for i, m in enumerate(metrics_restore(resumed["metrics"])):
             if m is not None:
-                mem, mem_B = m, Bp
-        out = jax.device_get(fin_fn(lam, eps, carry))
-        if emitter is not None:
-            emitter.close()       # flush in-flight records for this group
-        for j, i in enumerate(idxs):
-            metrics[i] = {k: float(v[j]) for k, v in out.items()}
+                metrics[i] = m
+        launch_saved = resumed["launch_saved"]
+        glaunch = resumed["global_launch"]
+        degraded = {int(k): v for k, v in resumed["degraded"].items()}
+        recovery = plan_restore(resumed["recovery"])
+    try:
+        for g, (gkey, idxs) in enumerate(groups.items()):
+            cfg = jobs[idxs[0]].policy_config()
+            runner = make_stream_runner(cfg, T, chunk=chunk, window=window,
+                                        verdict=vcfg)
+            eff_T, eff_win = runner.T, runner.window
+            if resumed is not None and g < resumed["group"]:
+                continue          # finished pre-kill: metrics restored above
 
-    if sink is not None:
-        sink.close()
+            # Per-group host work is hoisted to exactly here — one batch of
+            # device constants per group, built *before* the chunk loop.  Pad
+            # the group batch to a multiple of the mesh size by repeating the
+            # last job; replicas are dropped when results are scattered back.
+            B = len(idxs)
+            Bp = -(-B // ndev) * ndev
+            padded_idxs = idxs + [idxs[-1]] * (Bp - B)
+            pp = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs),
+                *[padded_of[(jobs[i].scenario, jobs[i].topo_seed)]
+                  for i in padded_idxs])
+            lam = jnp.array([jobs[i].lam for i in padded_idxs], jnp.float32)
+            eps = jnp.array([jobs[i].eps_b for i in padded_idxs], jnp.float32)
+            ak = jnp.array([arrival_code(
+                get_scenario(jobs[i].scenario).arrival)
+                for i in padded_idxs], jnp.int32)
+            ek = jnp.array([event_code(get_scenario(jobs[i].scenario).events)
+                            for i in padded_idxs], jnp.int32)
+            # One vmapped derivation instead of B host-side PRNGKey calls.
+            # int32 keeps negative seeds legal (uint32 would overflow at the
+            # host conversion); PRNGKey folds them identically either way.
+            keys = jax.vmap(jax.random.PRNGKey)(
+                jnp.array([jobs[i].seed for i in padded_idxs], jnp.int32))
+
+            init_fn, step_fn, fin_fn = make_group_launch(runner, mesh)
+            emitter = None
+            try:
+                if sink is not None:
+                    from repro.obs.emitter import ChunkEmitter
+                    emitter = ChunkEmitter("fleet", group=g, n_real=B,
+                                           runner=runner, mesh=mesh,
+                                           sink=sink)
+                launched = 0
+                if resumed is not None and g == resumed["group"]:
+                    launched = resumed["launched"]
+                    if launched > 0:
+                        # Bit-exact restore of the donated carry at the
+                        # snapshot boundary; lam/eps/keys/... above were
+                        # rebuilt deterministically from the job list.
+                        like = jax.eval_shape(init_fn, pp)
+                        carry = rt.restore_carry(like, mesh)
+                    else:
+                        carry = init_fn(pp)
+                    if emitter is not None and launched > 0:
+                        # The snapshot probe is derivable from the carry:
+                        # runner.probe is pure pytree indexing.
+                        emitter.restore_clock(
+                            launched, {k: np.asarray(v) for k, v in
+                                       runner.probe(carry).items()})
+                    if sink is not None:
+                        from repro.obs import schema
+                        sink.write(schema.make_record(
+                            "resume", group=g, chunk=launched,
+                            t=launched * runner.chunk, n_sims=B,
+                            engine="fleet",
+                            ckpt_step=resumed["ckpt_step"],
+                            n_preloaded=sink.n_preloaded))
+                else:
+                    carry = init_fn(pp)
+                while launched < runner.n_chunks:
+                    if rt is not None:
+                        carry = rt.launch(g, glaunch, step_fn, pp, lam, eps,
+                                          ak, ek, keys, carry)
+                    else:
+                        carry = step_fn(pp, lam, eps, ak, ek, keys, carry)
+                    launched += 1
+                    glaunch += 1
+                    if emitter is not None:
+                        # Dispatch the chunk-boundary telemetry probe
+                        # *before* the next launch donates these carry
+                        # buffers (DESIGN.md §11); non-blocking — records
+                        # assemble on the callback thread.
+                        emitter.emit(runner.probe(carry))
+                    if rt is not None:
+                        dead = rt.dead_hosts(glaunch)
+                        if dead:
+                            lane_dead = _host_lane_mask(Bp, ndev, dead)
+                            fresh = [l for l in range(B) if lane_dead[l]
+                                     and idxs[l] not in degraded]
+                            if fresh:
+                                # Park the dead lanes: their verdict leaf
+                                # is forced UNSTABLE (bit-frozen under
+                                # early_stop), their jobs flagged degraded.
+                                carry = make_sim_rewriter(runner, mesh)(
+                                    pp, jnp.zeros(Bp, bool),
+                                    jnp.asarray(lane_dead), carry)
+                                per = Bp // ndev
+                                for l in fresh:
+                                    degraded[idxs[l]] = \
+                                        f"host_dropout:host{l // per}"
+                                recovery = plan_recovery(
+                                    ndev, 1,
+                                    [f"host{h}" for h in dead], [], 1)
+                        if rt.should_snapshot(glaunch):
+                            from repro.runtime.resilience import plan_state
+                            rt.snapshot(glaunch, carry, {
+                                "group": g, "launched": launched,
+                                "global_launch": glaunch,
+                                "metrics": metrics,
+                                "launch_saved": launch_saved,
+                                "degraded": {str(k): v
+                                             for k, v in degraded.items()},
+                                "recovery": plan_state(recovery)})
+                        # After the snapshot: a simulated SIGTERM here
+                        # leaves a durable, bit-exact resume point.
+                        rt.maybe_preempt(glaunch)
+                    if early_stop and launched < runner.n_chunks:
+                        # Between-chunk readout of the [Bp] int32 verdict
+                        # leaf — the mid-run readout the donated-carry
+                        # structure permits.  All sims (mesh-padding
+                        # replicas mirror a real job) decided => the
+                        # remaining chunks would only shuffle frozen bits;
+                        # stop dispatching them.
+                        v = np.asarray(
+                            jax.device_get(runner.verdict_of(carry)))
+                        if np.all(v != VERDICT_UNDECIDED):
+                            break
+                launch_saved += (len(idxs) * (runner.n_chunks - launched)
+                                 * runner.chunk)
+                if memory_stats and Bp > mem_B:
+                    m = _memory_analysis(step_fn,
+                                         (pp, lam, eps, ak, ek, keys, carry))
+                    if m is not None:
+                        mem, mem_B = m, Bp
+                out = jax.device_get(fin_fn(lam, eps, carry))
+                for j, i in enumerate(idxs):
+                    metrics[i] = {k: float(v[j]) for k, v in out.items()}
+            finally:
+                if emitter is not None:
+                    emitter.close()   # flush in-flight records, also when
+                                      # a fault/preemption propagates
+            if rt is not None:
+                from repro.runtime.resilience import plan_state
+                # Group-boundary marker: a kill between groups resumes at
+                # g+1 with the finished metrics, never re-running group g.
+                rt.snapshot(glaunch, (), {
+                    "group": g + 1, "launched": 0, "global_launch": glaunch,
+                    "metrics": metrics, "launch_saved": launch_saved,
+                    "degraded": {str(k): v for k, v in degraded.items()},
+                    "recovery": plan_state(recovery)})
+    finally:
+        if sink is not None:
+            sink.close()
     return FleetResult(jobs=jobs, metrics=metrics, n_programs=len(groups),
                        n_sims=len(jobs), dims=dims, T=eff_T, window=eff_win,
                        memory_stats=mem,
@@ -680,4 +810,9 @@ def run_fleet(jobs: Sequence[FleetJob], T: int, chunk: int = 1024,
                                            for m in metrics)),
                        launch_slots_saved=launch_saved,
                        stream_records=sink.records if sink is not None
-                       else [])
+                       else [],
+                       resumed_from=(resumed["ckpt_step"]
+                                     if resumed is not None else None),
+                       degraded=degraded, recovery_plan=recovery,
+                       n_fault_retries=(rt.n_retries if rt is not None
+                                        else 0))

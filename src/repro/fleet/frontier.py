@@ -216,6 +216,38 @@ class Bisection:
         self.n_evals += 1
         self._pending = None
 
+    # -- checkpoint serialization (DESIGN.md §12) --------------------------
+    # The machine is pure host state, so a JSON round-trip of these fields
+    # is a *bit-exact* resume of the search: same pending probe, same memo,
+    # same budget — the atlas checkpoints every cell's machine this way.
+
+    def to_state(self) -> dict:
+        return {"k_lo": self.k_lo, "k_hi": self.k_hi,
+                "max_calls": self.max_calls, "n_evals": self.n_evals,
+                "n_iters": self.n_iters,
+                "outcomes": [[k, ok, und]
+                             for k, (ok, und) in self.outcomes.items()],
+                "phase": self._phase, "pending": self._pending,
+                "mid_pending": self._mid_pending, "done": self.done}
+
+    @classmethod
+    def from_state(cls, state: dict) -> "Bisection":
+        b = cls(1, 2)                       # placeholders, overwritten below
+        b.k_lo = int(state["k_lo"])
+        b.k_hi = int(state["k_hi"])
+        b.max_calls = int(state["max_calls"])
+        b.n_evals = int(state["n_evals"])
+        b.n_iters = int(state["n_iters"])
+        b.outcomes = {int(k): (bool(ok), bool(und))
+                      for k, ok, und in state["outcomes"]}
+        b._phase = state["phase"]
+        b._pending = (None if state["pending"] is None
+                      else int(state["pending"]))
+        b._mid_pending = (None if state["mid_pending"] is None
+                          else int(state["mid_pending"]))
+        b.done = bool(state["done"])
+        return b
+
     @property
     def undecided_hi(self) -> bool:
         """Final upper end blocked by horizon-limited (UNDECIDED) evidence

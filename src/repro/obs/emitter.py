@@ -36,6 +36,7 @@ from __future__ import annotations
 
 import functools
 import itertools
+import os
 import threading
 from typing import Callable, Dict, List
 
@@ -87,17 +88,54 @@ class StreamSink:
     """Fan-out for finished records: accumulate, optionally append JSONL
     to ``path`` (flushed per record, so a `--follow` tail sees them live),
     optionally call ``log``.  Thread-safe: records arrive on the callback
-    thread."""
+    thread.
+
+    ``append=True`` is the resumed-run mode (DESIGN.md §12): an existing
+    file is *preloaded* (its records seed ``self.records``, truncated to
+    the parseable prefix — a killed writer's torn last line is dropped)
+    and subsequent writes are deduplicated against the per-(kind, group)
+    monotone chunk clock.  A resumed engine replays the launches after
+    its snapshot, so any record the killed run already made durable is
+    re-emitted bit-identically — suppressing ``chunk <= last_seen``
+    leaves exactly the uninterrupted stream, with no duplicate and no
+    time-traveling record.  ``resume``-kind records are exempt (they mark
+    the seam itself)."""
 
     def __init__(self, path: str | None = None,
-                 log: Callable[[dict], None] | None = None):
+                 log: Callable[[dict], None] | None = None,
+                 append: bool = False):
         self.records: List[dict] = []
-        self._f = open(path, "w") if path else None
         self._log = log
         self._lock = threading.Lock()
+        self._clock: Dict[tuple, int] = {}   # (kind, group) -> last chunk
+        self._dedupe = False
+        self.n_preloaded = 0
+        if path and append and os.path.exists(path):
+            existing = schema.read_stream_jsonl(path)
+            with open(path, "w") as f:        # drop any torn trailing line
+                for rec in existing:
+                    f.write(schema.jsonl_line(rec) + "\n")
+            self.records.extend(existing)
+            self.n_preloaded = len(existing)
+            for rec in existing:
+                if rec.get("kind") != "resume":
+                    key = (rec.get("kind"), rec.get("group"))
+                    c = self._clock.get(key)
+                    if c is None or rec.get("chunk", 0) > c:
+                        self._clock[key] = rec.get("chunk", 0)
+            self._dedupe = True
+            self._f = open(path, "a")
+        else:
+            self._f = open(path, "w") if path else None
 
     def write(self, rec: dict) -> None:
         with self._lock:
+            if self._dedupe and rec.get("kind") != "resume":
+                key = (rec["kind"], rec["group"])
+                c = self._clock.get(key)
+                if c is not None and rec["chunk"] <= c:
+                    return           # already durable from the killed run
+                self._clock[key] = rec["chunk"]
             self.records.append(rec)
             if self._f is not None:
                 self._f.write(schema.jsonl_line(rec) + "\n")
@@ -136,6 +174,16 @@ class ChunkEmitter:
         _SINKS[self._handle] = self._consume
         self._handle_arr = jax.device_put(jnp.int32(self._handle),
                                           NamedSharding(mesh, P()))
+
+    def restore_clock(self, chunk_idx: int, prev: dict | None) -> None:
+        """Resume support (DESIGN.md §12): pin the differencing clock to a
+        restored chunk boundary.  ``prev`` is the probe of the restored
+        carry — exactly the probe the killed run last consumed — so the
+        first post-resume record differences against the same baseline an
+        uninterrupted run would have used."""
+        self._chunk_idx = int(chunk_idx)
+        self._prev = (None if prev is None
+                      else {k: np.asarray(v) for k, v in prev.items()})
 
     def emit(self, leaves: Dict[str, jax.Array]) -> None:
         """Dispatch one chunk-boundary probe (non-blocking).  Must be

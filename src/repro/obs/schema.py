@@ -32,7 +32,8 @@ from typing import Dict, Iterable, List
 
 #: Bump when any field table below changes shape, and bless the new
 #: digest in BLESSED_DIGESTS (scripts/check_stream.py enforces the pair).
-SCHEMA_VERSION = 1
+#: v2: added the "resume" record kind (preemption-safe runs, DESIGN.md §12).
+SCHEMA_VERSION = 2
 
 # Field type tags: "int" (json integer, bools rejected), "num" (integer or
 # float), "str", "dict" (nested object; contents are kind-specific and
@@ -81,6 +82,16 @@ STREAM_KINDS: Dict[str, Dict[str, str]] = {
         "verdicts": "dict",         # {verdict name: lane count} this launch
         "families": "dict",         # {family: {cells, done, lo_med, hi_med}}
     },
+    # resume: a preemption-safe engine picked the stream back up from a
+    # checkpoint (DESIGN.md §12).  ``chunk``/``t`` are the restored
+    # boundary's per-group clock, so a merged feed stays monotone; the
+    # sink exempts this kind from duplicate-suppression.
+    "resume": {
+        **_COMMON,
+        "engine": "str",        # fleet | serving | atlas
+        "ckpt_step": "int",     # checkpoint step the run restored
+        "n_preloaded": "int",   # records already durable from the killed run
+    },
 }
 
 
@@ -97,6 +108,7 @@ def schema_digest() -> str:
 #: scripts/check_stream.py fails ("schema changed without a version bump").
 BLESSED_DIGESTS: Dict[int, str] = {
     1: "cf81d7426080f2ac1b8123bcc45435a10196008787131209b3b24dcf181ba29c",
+    2: "920d91e8d051be592b6a3478ceb752d7c0dd8cf840d6b5050bec7b820caef97e",
 }
 
 
@@ -172,7 +184,9 @@ def validate_record(rec: dict, index: int | None = None) -> List[str]:
 def validate_stream(records: Iterable[dict]) -> List[str]:
     """Validate a whole stream: per-record shape plus the monotone stream
     clock — ``t`` non-decreasing and ``chunk`` strictly increasing per
-    ``(kind, group)``."""
+    ``(kind, group)``.  ``resume`` records mark the seam of a restarted
+    run, so their chunk clock is only required non-decreasing (a run
+    killed twice at the same boundary resumes there twice)."""
     errs: List[str] = []
     last: Dict[tuple, tuple] = {}
     for i, rec in enumerate(records):
@@ -187,7 +201,8 @@ def validate_stream(records: Iterable[dict]) -> List[str]:
             if t < pt:
                 errs.append(f"record {i}: t went backwards for {key}: "
                             f"{pt} -> {t}")
-            if chunk <= pc:
+            strict = rec["kind"] != "resume"
+            if chunk < pc or (strict and chunk == pc):
                 errs.append(f"record {i}: chunk not increasing for {key}: "
                             f"{pc} -> {chunk}")
         last[key] = (t, chunk)

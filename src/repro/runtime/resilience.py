@@ -1,0 +1,254 @@
+"""Preemption-safe engine runs (DESIGN.md §12).
+
+The chunk schedulers (`fleet.run_fleet`, `fleet.atlas.sweep_lambda_max`,
+`serving.run_serving`) drive Python loops of donated
+`jit(shard_map(vmap(chunk_step)))` launches.  Between launches the carry
+is a real pytree of device arrays that nothing aliases yet — the same
+window the verdict readouts and telemetry probes already use — so that is
+the *only* place a snapshot is taken: read the carry to host
+(snapshot-before-donate), publish it atomically with the host-side
+scheduler state, then let the next launch donate the buffers.
+
+What a checkpoint holds:
+
+  * the donated carry, as full unsharded numpy (restorable onto any mesh
+    via `Checkpointer.restore(..., shardings=...)`), and
+  * an ``extra`` JSON payload inside the manifest: engine name, a run
+    signature, the group/launch cursor, finished per-job metrics, and —
+    for the atlas — every cell's serialized `Bisection` machine,
+    `RateProbe` history, pending assignments and the `lam/seed` lane
+    tables.  Everything else (padded topologies, per-lane rate/seed/model
+    constants, compiled programs) is rebuilt deterministically from the
+    job list, so it is *not* checkpointed.
+
+Bit-exact resume follows: the carry round-trips through `.npy` exactly,
+the slot counter ``t`` rides *inside* the carry (so the per-slot
+`fold_in(key, t)` RNG stream continues unbroken), JSON round-trips the
+finished float metrics exactly, and the memoized launch builders hand a
+same-process resume the already-compiled programs (zero extra step
+compiles).  The run signature guards against resuming someone else's
+checkpoint: it hashes the jobs/horizon/verdict/mesh-width axes and a
+mismatch raises instead of silently blending two runs.
+
+`ResilienceConfig.fault_plane` additionally wires `runtime.fault`'s
+injectable fault plane into the same loops — see `FaultPlane` for the
+taxonomy (transient launch failures -> bounded retry with backoff; host
+dropout -> park + re-plan; preemption -> durable snapshot then raise).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import Checkpointer
+from .fault import (FaultExhausted, FaultPlane, InjectedFault,  # noqa: F401
+                    Preempted, RecoveryPlan)
+
+
+@dataclasses.dataclass(frozen=True)
+class ResilienceConfig:
+    """Knobs of one preemption-safe engine run.
+
+    checkpoint_dir : where snapshots live (None = fault plane only).
+    every          : snapshot every N-th launch boundary (global count).
+    keep           : retained steps (Checkpointer keep-last-k).
+    resume         : restore from the newest intact checkpoint if one
+                     matches this run's signature; False starts fresh.
+    blocking       : False writes the snapshot to disk on a background
+                     thread (the host->numpy read is always synchronous —
+                     that is the snapshot-before-donate contract).  A kill
+                     mid-write costs one interval: restore falls back to
+                     the previous intact step.
+    fault_plane    : injectable fault schedule (`runtime.fault.FaultPlane`).
+    max_retries    : bounded retry budget per launch for InjectedFault.
+    backoff_s      : base of the exponential retry backoff (0 = immediate).
+    """
+
+    checkpoint_dir: Optional[str] = None
+    every: int = 1
+    keep: int = 3
+    resume: bool = True
+    blocking: bool = True
+    fault_plane: Optional[FaultPlane] = None
+    max_retries: int = 3
+    backoff_s: float = 0.0
+
+
+def run_signature(engine: str, **params) -> str:
+    """Stable hash of the axes that define a run's identity.
+
+    Jobs/cells are frozen dataclasses and configs are frozen dataclasses
+    or ints, so their reprs are deterministic; resuming a checkpoint whose
+    signature differs raises rather than blending two different runs."""
+    canon = repr((engine, sorted(params.items())))
+    return hashlib.sha256(canon.encode()).hexdigest()
+
+
+def host_lane_mask(Bp: int, ndev: int, dead_hosts) -> np.ndarray:
+    """[Bp] bool mask of lanes living on dead mesh hosts.
+
+    The `"fleet"` mesh shards the padded batch into ``ndev`` contiguous
+    blocks, so lane ``l`` lives on host ``l // (Bp // ndev)``."""
+    per = Bp // ndev
+    mask = np.zeros(Bp, bool)
+    for h in dead_hosts:
+        if 0 <= h < ndev:
+            mask[h * per:(h + 1) * per] = True
+    return mask
+
+
+def plan_state(plan: Optional[RecoveryPlan]) -> Optional[dict]:
+    return None if plan is None else dataclasses.asdict(plan)
+
+
+def plan_restore(state: Optional[dict]) -> Optional[RecoveryPlan]:
+    if state is None:
+        return None
+    return RecoveryPlan(
+        action=state["action"], evict=tuple(state["evict"]),
+        new_mesh_shape=(None if state["new_mesh_shape"] is None
+                        else tuple(state["new_mesh_shape"])),
+        note=state["note"])
+
+
+# -- host-side scheduler-state serialization (atlas) ------------------------
+# RateProbe/AtlasRow are frozen dataclasses of scalars + tuples: a plain
+# asdict round-trips through JSON up to tuple->list, undone here.
+
+def probe_state(p) -> dict:
+    return dataclasses.asdict(p)
+
+
+def probe_restore(state: dict):
+    from repro.fleet.frontier import RateProbe
+    s = dict(state)
+    s["verdicts"] = tuple(s["verdicts"])
+    s["decided_at"] = tuple(int(x) for x in s["decided_at"])
+    return RateProbe(**s)
+
+
+def row_state(row) -> dict:
+    s = dataclasses.asdict(row)
+    s["probes"] = [probe_state(p) for p in row.probes]
+    return s
+
+
+def row_restore(state: dict):
+    from repro.fleet.atlas import AtlasRow
+    s = dict(state)
+    s["probes"] = tuple(probe_restore(p) for p in s["probes"])
+    return AtlasRow(**s)
+
+
+class ResilientRun:
+    """One engine run's resilience runtime: snapshot/restore + faults.
+
+    Built by the engines when a `ResilienceConfig` is passed; `resumed`
+    is the newest intact checkpoint's ``extra`` payload (plus its
+    ``ckpt_step``) when there is one to continue from, else None.
+    """
+
+    def __init__(self, cfg: ResilienceConfig, engine: str, signature: str):
+        self.cfg = cfg
+        self.engine = engine
+        self.signature = signature
+        self.ckpt = (Checkpointer(cfg.checkpoint_dir, keep=cfg.keep)
+                     if cfg.checkpoint_dir else None)
+        self.fault = cfg.fault_plane
+        self.n_retries = 0
+        self.resumed: Optional[dict] = None
+        if self.ckpt is not None and cfg.resume:
+            step = self.ckpt.restored_step(fallback=True)
+            if step is not None:
+                extra = self.ckpt.extra(step)
+                if not extra or extra.get("engine") != engine:
+                    raise ValueError(
+                        f"{cfg.checkpoint_dir}: checkpoint belongs to "
+                        f"engine {extra.get('engine') if extra else None!r}"
+                        f", not {engine!r}")
+                if extra.get("signature") != signature:
+                    raise ValueError(
+                        f"{cfg.checkpoint_dir}: checkpoint was written by "
+                        "a different run (signature mismatch) — point "
+                        "checkpoint_dir elsewhere or pass resume=False")
+                self.resumed = dict(extra)
+                self.resumed["ckpt_step"] = step
+
+    # -- snapshot / restore -------------------------------------------------
+
+    def should_snapshot(self, launches_done: int) -> bool:
+        return (self.ckpt is not None
+                and launches_done % max(self.cfg.every, 1) == 0)
+
+    def snapshot(self, step: int, carry: Any, extra: dict) -> None:
+        """Publish the carry + scheduler state for this boundary.  The
+        device->host read happens here, synchronously, *before* the next
+        launch donates the carry buffers (snapshot-before-donate)."""
+        if self.ckpt is None:
+            return
+        self.ckpt.save(step, carry, blocking=self.cfg.blocking,
+                       extra={"engine": self.engine,
+                              "signature": self.signature, **extra})
+
+    def restore_carry(self, like: Any, mesh: Mesh) -> Any:
+        """Restore the resumed step's carry, re-sharded onto ``mesh``
+        (every carry leaf is batch-sharded along the `"fleet"` axis)."""
+        shardings = jax.tree_util.tree_map(
+            lambda _: NamedSharding(mesh, P("fleet")), like)
+        return self.ckpt.restore(like, step=self.resumed["ckpt_step"],
+                                 shardings=shardings)
+
+    # -- fault plane --------------------------------------------------------
+
+    def launch(self, group: int, launch_idx: int, fn, *args):
+        """Dispatch one launch through the fault plane: InjectedFault
+        triggers bounded retry with exponential backoff.  Safe to retry
+        with the live carry because the fault fires *before* dispatch —
+        nothing has been donated yet."""
+        attempt = 0
+        while True:
+            try:
+                if self.fault is not None:
+                    self.fault.on_launch(group, launch_idx)
+                return fn(*args)
+            except InjectedFault as e:
+                attempt += 1
+                self.n_retries += 1
+                if attempt > self.cfg.max_retries:
+                    raise FaultExhausted(
+                        f"launch {launch_idx} (group {group}) failed "
+                        f"{attempt} times: {e}") from e
+                if self.cfg.backoff_s > 0:
+                    time.sleep(self.cfg.backoff_s * 2 ** (attempt - 1))
+
+    def maybe_preempt(self, launches_done: int) -> None:
+        if self.fault is not None:
+            self.fault.maybe_preempt(launches_done)
+
+    def dead_hosts(self, launches_done: int) -> tuple:
+        if self.fault is None:
+            return ()
+        return self.fault.dead_hosts(launches_done)
+
+
+def maybe_resilient(cfg: "ResilienceConfig | None", engine: str,
+                    **sig_params) -> Optional[ResilientRun]:
+    """The engines' one-liner: None config -> None, else a ResilientRun
+    keyed by `run_signature(engine, **sig_params)`."""
+    if cfg is None:
+        return None
+    return ResilientRun(cfg, engine, run_signature(engine, **sig_params))
+
+
+def metrics_restore(ms: list) -> list:
+    """Finished per-job metrics out of the JSON payload.  Floats
+    round-trip exactly (json emits repr-precision doubles); per-class
+    list leaves (serving) come back as lists, matching the engine's own
+    representation."""
+    return [None if m is None else dict(m) for m in ms]
