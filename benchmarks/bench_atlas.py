@@ -1,33 +1,52 @@
-"""Capacity atlas benchmark: the measured-vs-LP frontier, registry-wide.
+"""Capacity atlas benchmark: the measured-vs-LP frontier at 10^3 scale.
 
 Runs `fleet.atlas.sweep_lambda_max` over every scenario family in the
 registry grid (paper_grid, random_geometric, ring, tree, expander,
 fat_tree, wireless_grid, plus the GE-faded/comp-outage variants) at
-ATLAS_SWEEP's (family x topo_seed) width: >= 100 (scenario x seed)
-bisection lanes advanced by one padded chunk-step launch per policy
-group (DESIGN.md §10).  Each cell bisects its own exact regulated LP
-bound (`capacity_upper_bound(problem, rho0=1+eps_B)`) on the
-rel_tol-quantized grid with `fold_seed`-decoupled probe streams — the
-per-cell results are bit-identical to what sequential
-`find_lambda_max` calls would return at the same PadDims
-(tests/test_atlas.py asserts this on a mini-atlas).
+ATLAS_SWEEP's (family x topo_seed) width — >= ATLAS_MIN_CELLS cells,
+each replicated across ATLAS_SWEEP["seeds"] arrival seeds — with the
+DESIGN.md §13 scaling levers on:
 
-The emitted table (`atlas_table`) carries per-family ratio medians of
-lam_max / bound_exact, UNDECIDED-at-bracket-top counts (horizon-limited
-localization, distinguished from proven-UNSTABLE evidence since the
-frontier's `undecided` surfacing), and the fleet-level launch
-accounting.  In-bench assertions enforce the acceptance gates —
-ATLAS_BAND_FAMILIES medians inside ATLAS_RATIO_BAND, at most
-ATLAS_MAX_PROGRAMS compiled programs with exactly one step compile
-each, the ATLAS_MAX_LAUNCHES budget, and a >= ATLAS_MIN_SPEEDUP
-launch-count reduction vs the sequential path — and
-`scripts/check_bench.py --mode atlas` re-checks them against the
+* **shape buckets** (`n_buckets`): cells are partitioned by (E, N, NC)
+  quantiles and each (policy group x bucket) pair gets its own padded
+  launch schedule and its own compiled program, so ring cells stop
+  paying expander pad dims;
+* **adaptive horizons** (`max_requeues`): any cell whose bracket top
+  stays UNDECIDED — or whose bracket fully collapses, the signature of
+  the low-rate gradient-fill transient reading as proven-UNSTABLE — is
+  re-queued over its original bracket at a doubled horizon (one 2xT
+  rung here; tests/test_atlas.py exercises the full 2xT-then-4xT
+  ladder) — the bench asserts zero silently-collapsed brackets (a
+  collapsed cell must have exhausted its re-queue budget, never
+  skipped it);
+* **seed bands**: per-family q10-q90 bands over the lam_max /
+  bound_exact ratios, gated on width (a fat band means seed noise is
+  setting the median).
+
+Each cell bisects its own exact regulated LP bound
+(`capacity_upper_bound(problem, rho0=1+eps_B)`) on the rel_tol-
+quantized grid with `fold_seed`-decoupled probe streams — per-cell
+results are bit-identical to what sequential `find_lambda_max` calls
+would return at the same PadDims (tests/test_atlas.py asserts this per
+bucket on a mini-atlas).  The LP side is deduplicated through the
+fingerprint-keyed bounded cache (`report.exact_lam_star`): the bench
+asserts solve count <= n_cells — deterministic families cost one solve
+across all their topo_seeds.
+
+In-bench assertions enforce the acceptance gates — ATLAS_BAND_FAMILIES
+medians inside ATLAS_RATIO_BAND with band widths <=
+ATLAS_MAX_BAND_WIDTH, at most ATLAS_MAX_PROGRAMS compiled programs
+with exactly one step compile each, >= ATLAS_MIN_BUCKETS buckets whose
+per-bucket launch ledger sums to the total within
+ATLAS_MAX_BUCKET_LAUNCHES each, the ATLAS_MAX_LAUNCHES budget, and a
+>= ATLAS_MIN_SPEEDUP launch-count reduction vs the sequential path —
+and `scripts/check_bench.py --mode atlas` re-checks them against the
 committed `BENCH_atlas.json` baseline.
 
 Usage:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
       python benchmarks/bench_atlas.py [--out BENCH_atlas.json] \
-          [--stream-out ATLAS_stream.jsonl]
+          [--stream-out ATLAS_stream.jsonl] [--preset full|ci]
 """
 from __future__ import annotations
 
@@ -35,20 +54,39 @@ import argparse
 import json
 import time
 
-#: The atlas grid + search configuration.  T/chunk are calibrated so the
-#: streaming verdict can latch well before the horizon (earliest decision
-#: 6 windows = slot 3072; chunk < 256 leaves the burn-in inside the
-#: gradient fill transient and misreads stable rates as UNSTABLE, and
-#: T = 2048 leaves ring/tree cells UNDECIDED often enough to collapse
-#: their brackets), rel_tol quantizes every probe to 5% of each cell's
-#: own exact bound, and seeds=(0,) keeps one lane per cell — 9 families
-#: x 12 topo_seeds = 108 bisection lanes.
+#: The atlas grid + search configuration.  T=4096/chunk=512 keeps the
+#: verdict discipline the original atlas calibrated (burn-in past the
+#: gradient-fill transient — chunk < 512 misreads stable rates as
+#: UNSTABLE; T < 4096 leaves ring/tree brackets collapsed at the base
+#: horizon), and the single re-queue rung re-runs UNDECIDED-at-top
+#: cells at 2xT = 8192 (DESIGN.md §13; ~70% of registry cells are
+#: horizon-limited at the base horizon, so a second rung would re-run
+#: most of the atlas at 4xT for little verdict gain — the 2-rung
+#: ladder is exercised by tests/test_atlas.py instead).  rel_tol
+#: quantizes every probe to 10% of each cell's own exact bound (the
+#: band gates are stated on that grid); seeds=(0, 1, 2) replicates
+#: every cell across arrival seeds for the band math.  9 families x 56
+#: topo_seeds = 504 cells, 1512 bisection lanes, split into 3 shape
+#: buckets (E<=14 / E=24 / E>24 at the registry's shape distribution).
 ATLAS_SWEEP = dict(
     families=("paper_grid", "random_geometric", "ring", "tree", "expander",
               "fat_tree", "wireless_grid", "ge_grid", "ge_comp_grid"),
-    topo_seeds=tuple(range(12)),
-    policy="pi3", eps_b=0.05, seeds=(0,),
-    T=4096, chunk=512, rel_tol=0.05, max_calls=12)
+    topo_seeds=tuple(range(56)),
+    policy="pi3", eps_b=0.05, seeds=(0, 1, 2),
+    T=4096, chunk=512, rel_tol=0.1, max_calls=8,
+    n_buckets=3, max_requeues=1)
+
+#: presets: "full" is the committed-baseline scale above (~35 min on a
+#: single core — regenerate BENCH_atlas.json with it out-of-band); "ci"
+#: subsamples topo_seeds/seeds at the *same* horizon, chunk, bucketing
+#: and re-queue discipline so every scaling lever still runs inside the
+#: CI job budget.  The verdict calibration (T=4096/chunk=512) must not
+#: differ between presets — a cheaper horizon would change the verdicts
+#: themselves, not just the sample size.
+ATLAS_PRESETS = {
+    "full": ATLAS_SWEEP,
+    "ci": dict(ATLAS_SWEEP, topo_seeds=tuple(range(12)), seeds=(0, 1)),
+}
 
 #: lam_max / bound_exact band for the *unfaded* families' per-family
 #: ratio median (acceptance: the atlas localizes the exact LP bound from
@@ -63,71 +101,148 @@ ATLAS_RATIO_BAND = (0.90, 1.0)
 ATLAS_BAND_FAMILIES = ("paper_grid", "random_geometric", "ring", "tree",
                        "expander", "fat_tree")
 
-#: compiled-program ceiling: the whole atlas must fit in <= 4 policy
-#: groups (here: 2 — wireless_grid forks the interference program family,
-#: everything else shares one), each compiled exactly once.
-ATLAS_MAX_PROGRAMS = 4
+#: per-family q10-q90 band width ceiling on the banded families: seed
+#: replication must tighten the surface, not smear it (DESIGN.md §13).
+#: Two rel_tol grid steps — one step is the healthy spread, two flags a
+#: decile of cells reading a whole extra step low.
+ATLAS_MAX_BAND_WIDTH = 0.2
 
-#: minimum (scenario x seed) bisection lanes the sweep must advance.
-ATLAS_MIN_LANES = 100
+#: scale floors: (scenario x topo_seed) cells, (cell x seed) bisection
+#: lanes, and the number of non-empty shape buckets.
+ATLAS_MIN_CELLS = 500
+ATLAS_MIN_LANES = 1500
+ATLAS_MIN_BUCKETS = 2
 
-#: chunk-step launch budget for the whole atlas, and the minimum
-#: batching win vs per-cell sequential searches (seq_launches counts the
-#: launches the per-cell `find_lambda_max` path would have issued).
-ATLAS_MAX_LAUNCHES = 250
-ATLAS_MIN_SPEEDUP = 5.0
+#: compiled-program ceiling: one program per (policy group x bucket),
+#: each compiled exactly once.  Here: 2 policy groups (wireless_grid
+#: forks the interference program family) x 3 buckets = 6; the ceiling
+#: leaves headroom for a bucket-count bump without a baseline edit.
+ATLAS_MAX_PROGRAMS = 8
+
+#: chunk-step launch budgets — total and per bucket (the re-queue
+#: rung extends the busiest bucket, not the whole fleet) — and the
+#: minimum batching win vs per-cell sequential searches (seq_launches
+#: counts the launches the per-cell `find_lambda_max` path would have
+#: issued).
+ATLAS_MAX_LAUNCHES = 450
+ATLAS_MAX_BUCKET_LAUNCHES = 200
+ATLAS_MIN_SPEEDUP = 10.0
+
+#: per-preset scale gates (the shared discipline gates — band widths,
+#: program ceiling, compile-per-program, ledger-sums-to-total — are
+#: preset-independent above).  Tables carry their preset in a "preset"
+#: field so scripts/check_bench.py gates each table at its own scale.
+ATLAS_GATES = {
+    "full": dict(min_cells=ATLAS_MIN_CELLS, min_lanes=ATLAS_MIN_LANES,
+                 max_launches=ATLAS_MAX_LAUNCHES,
+                 max_bucket_launches=ATLAS_MAX_BUCKET_LAUNCHES,
+                 min_speedup=ATLAS_MIN_SPEEDUP),
+    "ci": dict(min_cells=100, min_lanes=200,
+               max_launches=ATLAS_MAX_LAUNCHES,
+               max_bucket_launches=ATLAS_MAX_BUCKET_LAUNCHES,
+               min_speedup=5.0),
+}
 
 
-def run(emit, stream_out: str | None = None) -> dict:
+def run(emit, stream_out: str | None = None, preset: str = "full") -> dict:
     """Run the atlas sweep, assert the gates, return the JSON table."""
-    from repro.fleet import atlas_table, registry_cells, sweep_lambda_max
+    from repro.fleet import (atlas_table, exact_lam_star, registry_cells,
+                             sweep_lambda_max)
 
-    c = dict(ATLAS_SWEEP)
+    c = dict(ATLAS_PRESETS[preset])
+    gates = ATLAS_GATES[preset]
+    max_requeues = c["max_requeues"]
     cells = registry_cells(c.pop("families"), c.pop("topo_seeds"),
                            policy=c.pop("policy"), eps_b=c.pop("eps_b"))
+    exact_lam_star.cache_clear()
     t0 = time.time()
     res = sweep_lambda_max(cells, **c, stream_path=stream_out)
     wall = time.time() - t0
 
+    # LP hygiene (DESIGN.md §13): the fingerprint-keyed cache dedupes
+    # topo_seeds of deterministic families — one solve per *distinct*
+    # padded problem, never more than one per cell.
+    lp = exact_lam_star.cache_info()
+    assert lp.misses <= res.n_cells, (
+        f"{lp.misses} LP solves for {res.n_cells} cells "
+        "(fingerprint dedup broken)")
+
     table = atlas_table(res)
+    table["preset"] = preset
     table["wall_s"] = wall
+    table["lp_solves"] = lp.misses
     if res.stream_records:
         table["stream_records"] = len(res.stream_records)
     table["us_per_lane_slot"] = (1e6 * wall / res.total_slots
                                  if res.total_slots else 0.0)
     emit(f"fleet/atlas/sweep,{table['us_per_lane_slot']:.1f},"
          f"cells={res.n_cells} lanes={res.n_lanes} "
-         f"programs={res.n_programs} launches={res.n_launches} "
-         f"seq_launches={res.seq_launches} "
+         f"buckets={res.n_buckets} programs={res.n_programs} "
+         f"launches={res.n_launches} requeues={res.n_requeues} "
+         f"lp_solves={lp.misses} seq_launches={res.seq_launches} "
          f"speedup=x{res.launch_speedup:.1f} wall_s={wall:.1f}")
+    for b in sorted(res.bucket_launches):
+        d = res.bucket_dims[b]
+        emit(f"fleet/atlas/bucket{b},,dims=({d.n_nodes},{d.n_edges},"
+             f"{d.n_comp}) cells={res.bucket_cells.get(b, 0)} "
+             f"launches={res.bucket_launches[b]}")
 
     lo, hi = ATLAS_RATIO_BAND
     for fam, row in table["families"].items():
+        band = row["band"]
         emit(f"fleet/atlas/{fam},,ratio_median={row['ratio_median']:.3f} "
-             f"[{row['ratio_min']:.3f}, {row['ratio_max']:.3f}] "
+             f"band=[{band['q10']:.3f}, {band['q90']:.3f}] "
+             f"(w={band['width']:.3f}) "
              f"undecided_hi={row['n_undecided_hi']}/{row['n_cells']} "
+             f"requeued={row['n_requeued']} "
              f"calls_mean={row['n_calls_mean']:.1f}")
         for cell in row["cells"]:
             assert cell["ratio"] <= 1.0 + 1e-9, (
                 f"{fam}/ts{cell['topo_seed']}: measured lam_max "
                 f"{cell['lam_max']:.3f} exceeds the exact LP bound "
                 f"{cell['bound_exact']:.3f}")
+            # zero silently-collapsed brackets: ANY collapsed cell —
+            # UNDECIDED-at-top or proven-UNSTABLE-at-bottom (the
+            # low-rate gradient-fill artifact reads as the latter) —
+            # must have burned its whole re-queue ladder first.
+            if cell["lam_max"] == 0.0:
+                assert cell["n_requeues"] == max_requeues, (
+                    f"{fam}/ts{cell['topo_seed']}: collapsed bracket with "
+                    f"only {cell['n_requeues']} re-queues (budget "
+                    f"{max_requeues}) — silent collapse")
     for fam in ATLAS_BAND_FAMILIES:
-        med = table["families"][fam]["ratio_median"]
+        row = table["families"][fam]
+        med, width = row["ratio_median"], row["band"]["width"]
         assert lo <= med <= hi + 1e-9, (
             f"{fam}: ratio median {med:.3f} outside [{lo}, {hi}]")
+        assert width <= ATLAS_MAX_BAND_WIDTH + 1e-9, (
+            f"{fam}: band width {width:.3f} > {ATLAS_MAX_BAND_WIDTH}")
 
-    assert res.n_lanes >= ATLAS_MIN_LANES, (
-        f"only {res.n_lanes} bisection lanes (need >= {ATLAS_MIN_LANES})")
+    assert res.n_cells >= gates["min_cells"], (
+        f"only {res.n_cells} cells (need >= {gates['min_cells']})")
+    assert res.n_lanes >= gates["min_lanes"], (
+        f"only {res.n_lanes} bisection lanes "
+        f"(need >= {gates['min_lanes']})")
+    assert res.n_buckets >= ATLAS_MIN_BUCKETS, (
+        f"{res.n_buckets} shape buckets (need >= {ATLAS_MIN_BUCKETS})")
     assert res.n_programs <= ATLAS_MAX_PROGRAMS, (
         f"{res.n_programs} compiled programs (ceiling {ATLAS_MAX_PROGRAMS})")
     assert res.n_step_compiles == res.n_programs, (
         f"{res.n_step_compiles} step compiles across {res.n_programs} "
-        "policy groups (the bisection rewrites must not retrace)")
-    assert res.n_launches <= ATLAS_MAX_LAUNCHES, (
-        f"{res.n_launches} chunk launches (budget {ATLAS_MAX_LAUNCHES})")
-    assert res.launch_speedup >= ATLAS_MIN_SPEEDUP, (
-        f"launch speedup x{res.launch_speedup:.1f} < x{ATLAS_MIN_SPEEDUP}")
+        "(policy group x bucket) programs (the bisection rewrites must "
+        "not retrace)")
+    assert sum(res.bucket_launches.values()) == res.n_launches, (
+        res.bucket_launches, res.n_launches)
+    for b, n in sorted(res.bucket_launches.items()):
+        assert n <= gates["max_bucket_launches"], (
+            f"bucket {b}: {n} launches "
+            f"(budget {gates['max_bucket_launches']})")
+    assert res.n_launches <= gates["max_launches"], (
+        f"{res.n_launches} chunk launches "
+        f"(budget {gates['max_launches']})")
+    assert res.launch_speedup >= gates["min_speedup"], (
+        f"launch speedup x{res.launch_speedup:.1f} "
+        f"< x{gates['min_speedup']}")
     return {"atlas": table}
 
 
@@ -137,8 +252,13 @@ def main() -> None:
     ap.add_argument("--stream-out", default=None,
                     help="write per-launch telemetry records (JSONL, "
                     "repro.obs.schema) here while the sweep runs")
+    ap.add_argument("--preset", default="full",
+                    choices=sorted(ATLAS_PRESETS),
+                    help="'full' regenerates the committed baseline scale; "
+                    "'ci' subsamples topo_seeds/seeds at the same horizon "
+                    "so the gate fits the CI job budget")
     args = ap.parse_args()
-    table = run(print, stream_out=args.stream_out)
+    table = run(print, stream_out=args.stream_out, preset=args.preset)
     if args.out:
         with open(args.out, "w") as f:
             json.dump(table, f, indent=2)

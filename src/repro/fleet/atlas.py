@@ -6,8 +6,12 @@ cell at a time: every probe is its own `run_fleet` call, so sweeping the
 scenario registry is serially bottlenecked on launch count.  The atlas
 inverts it (DESIGN.md §10): the offered rate was *already* per-sim traced
 data in the chunk-step signature, so hundreds of (cell × seed) bisection
-lanes ride **one padded launch per policy group**, each lane probing its
-own cell's current grid rate.
+lanes ride **one padded launch per (policy group × size bucket)**, each
+lane probing its own cell's current grid rate.  Buckets (DESIGN.md §13)
+cut the padding hull by size quantiles so one big topology no longer
+inflates every small lane; adaptive horizons (``max_requeues``) re-queue
+UNDECIDED-at-top cells at doubled chunk budgets instead of reporting a
+collapsed bracket.
 
 The host loop is the PR-5 machinery turned into a scheduler:
 
@@ -46,7 +50,7 @@ from jax.sharding import Mesh
 
 from repro.core.graph import ComputeProblem
 from repro.core.queues import VERDICT_NAMES, VERDICT_UNDECIDED
-from .batching import PadDims, pad_problem
+from .batching import PadDims, make_buckets, pad_problem
 from .engine import (FleetJob, VerdictConfig, _policy_group_key,
                      make_group_launch, make_sim_rewriter,
                      make_stream_runner, resolve_verdict)
@@ -94,6 +98,11 @@ class AtlasRow:
                              # search was cut short and (lo, hi) is the
                              # bracket *at the dropout*, not a converged
                              # localization (DESIGN.md §12)
+    bucket: int = 0          # PadDims bucket the cell's lanes ran in
+                             # (DESIGN.md §13); 0 in single-bucket sweeps
+    n_requeues: int = 0      # adaptive-horizon escalations: each re-queue
+                             # restarted the search at double the horizon
+                             # with a bumped fold_seed call_index
 
 
 @dataclasses.dataclass
@@ -103,11 +112,16 @@ class AtlasResult:
     rows: List[AtlasRow]
     n_cells: int
     n_lanes: int             # (cell × seed) bisection lanes advanced
-    n_programs: int          # policy groups (compiled program families)
+    n_programs: int          # (policy group × bucket) launch units, each
+                             # its own padded-shape compiled program
     n_launches: int          # chunk-step launches the atlas dispatched
     seq_launches: int        # launches per-cell find_lambda_max would issue
     n_rewrites: int          # in-place carry rewrites at launch boundaries
-    n_step_compiles: int     # summed step-program compiles (== n_programs)
+    n_step_compiles: int     # summed step-trace cache sizes (== n_programs
+                             # in a cold process; warm memoized caches from
+                             # an earlier same-process sweep count too, so
+                             # resume bit-equality holds — compare deltas
+                             # across back-to-back sweeps, not absolutes)
     total_slots: int
     full_slots: int
     slots_saved: int
@@ -125,6 +139,18 @@ class AtlasResult:
                              # host dropout (their rows carry degraded=True)
     recovery_plan: object | None = None   # runtime.fault.RecoveryPlan
     n_fault_retries: int = 0
+    bucket_dims: List[PadDims] = dataclasses.field(default_factory=list)
+                             # per-bucket padded shapes (DESIGN.md §13);
+                             # [dims] for single-bucket sweeps
+    bucket_cells: Dict[int, int] = dataclasses.field(default_factory=dict)
+                             # bucket -> cells assigned to it
+    bucket_launches: Dict[int, int] = dataclasses.field(default_factory=dict)
+                             # bucket -> chunk launches dispatched in it
+    n_requeues: int = 0      # total adaptive-horizon re-queues across cells
+
+    @property
+    def n_buckets(self) -> int:
+        return max(len(self.bucket_dims), 1)
 
     @property
     def launch_speedup(self) -> float:
@@ -155,20 +181,45 @@ def sweep_lambda_max(cells: Sequence[AtlasJob], *,
                      max_calls: int = 24, early_stop: bool = True,
                      verdict: VerdictConfig | None = None,
                      devices=None, dims: PadDims | None = None,
+                     n_buckets: int = 1, max_requeues: int = 0,
                      stream: bool = False, stream_log=None,
                      stream_path: str | None = None,
                      resilience=None) -> AtlasResult:
     """Bisect λ_max for every atlas cell, batched: one padded chunk-step
-    launch per policy group advances all cells' current probes at once.
+    launch per (policy group × size bucket) advances all of its cells'
+    current probes at once.
 
     Parameters mirror `find_lambda_max` — each cell's search is driven by
     the same `Bisection` machine on the same rel_tol-quantized grid of its
     own exact bound, with the same `fold_seed` probe streams, so per-cell
-    results are bit-identical to the sequential path run with the atlas
-    ``dims`` (`PadDims.of` over every cell's topology unless given).
+    results are bit-identical to the sequential path run with the cell's
+    bucket dims (`AtlasResult.bucket_dims[row.bucket]`).
     ``early_stop=True`` (default) harvests a probe as soon as all its
     lanes latch; ``False`` reproduces full-horizon probing (every probe
     runs all ``n_chunks`` launches).
+
+    ``n_buckets > 1`` groups the distinct topologies into quantile-based
+    size buckets (`batching.make_buckets`, DESIGN.md §13): each (policy
+    group × bucket) launches its own padded program, so one big expander
+    no longer inflates every small ring lane.  An explicit ``dims``
+    forces the single-bucket path padded to those shared dims (the
+    equivalence-test hook).  Padded shapes change reduction shapes hence
+    bits, so per-cell results are compared against the sequential path
+    *at the same bucket dims*, never across bucketings.
+
+    ``max_requeues > 0`` turns on adaptive per-cell horizons: a cell
+    whose finished machine is still UNDECIDED-at-top (`undecided_hi` —
+    the bracket top blocked by horizon-limited evidence only) *or*
+    whose bracket fully collapsed (``k_lo == 0``: no rate proved
+    sustainable, which at rates far below capacity is usually the
+    gradient-fill transient masquerading as a proven UNSTABLE — both
+    are the collapsed-bracket failure mode) restarts its whole search
+    with double the chunk budget (2×T, then 4×T, ... up to
+    ``max_requeues`` escalations).  Re-probes ride the same compiled program — verdict
+    latching depends on the window config, not T, so a longer horizon is
+    just more chunk launches — through the same `make_sim_rewriter`
+    reset path, with the fold_seed ``call_index`` bumped to the attempt
+    number so re-probe streams never alias first-attempt streams.
 
     ``stream``/``stream_log``/``stream_path`` mirror `run_fleet`: one
     "atlas"-kind record per chunk launch (DESIGN.md §11) — active/done
@@ -205,6 +256,8 @@ def sweep_lambda_max(cells: Sequence[AtlasJob], *,
     bounds: List[float] = []
     steps: List[float] = []
     machines: List[Bisection] = []
+    k_lo0: List[int] = []
+    k_hi0: List[int] = []
     for c in cells:
         bound = policy_bound_exact(c.scenario, c.policy, c.eps_b,
                                    topo_seed=c.topo_seed)
@@ -214,27 +267,55 @@ def sweep_lambda_max(cells: Sequence[AtlasJob], *,
         step = rel_tol * bound
         bounds.append(bound)
         steps.append(step)
-        machines.append(Bisection(
-            k_lo=max(int(np.floor(bracket[0] * bound / step)), 0),
-            k_hi=max(int(np.ceil(bracket[1] * bound / step)), 1),
-            max_calls=max_calls))
+        k_lo0.append(max(int(np.floor(bracket[0] * bound / step)), 0))
+        k_hi0.append(max(int(np.ceil(bracket[1] * bound / step)), 1))
+        machines.append(Bisection(k_lo=k_lo0[-1], k_hi=k_hi0[-1],
+                                  max_calls=max_calls))
 
-    # --- topologies: build each distinct one once, pad to atlas-wide dims.
+    # --- topologies: build each distinct one once, pad to its bucket's
+    # dims.  An explicit `dims` forces one shared bucket (the equivalence
+    # hook); otherwise `make_buckets` cuts quantile-based size buckets
+    # (DESIGN.md §13) and each problem is padded only to its bucket hull.
     problem_of: Dict[tuple, ComputeProblem] = {}
     for c in cells:
         k = (c.scenario, c.topo_seed)
         if k not in problem_of:
             problem_of[k] = get_scenario(c.scenario).build(c.topo_seed)
-    dims = dims or PadDims.of(list(problem_of.values()))
-    padded_of = {k: pad_problem(p, dims) for k, p in problem_of.items()}
+    problem_keys = list(problem_of)
+    if dims is not None:
+        bucket_dims = [dims]
+        bucket_of = {k: 0 for k in problem_keys}
+    else:
+        bucket_dims, assignment = make_buckets(
+            [problem_of[k] for k in problem_keys], n_buckets)
+        bucket_of = {k: b for k, b in zip(problem_keys, assignment)}
+    dims = PadDims(
+        n_nodes=max(d.n_nodes for d in bucket_dims),
+        n_edges=max(d.n_edges for d in bucket_dims),
+        n_comp=max(d.n_comp for d in bucket_dims))
+    padded_of = {k: pad_problem(p, bucket_dims[bucket_of[k]])
+                 for k, p in problem_of.items()}
+    cell_bucket = [bucket_of[(c.scenario, c.topo_seed)] for c in cells]
 
-    # --- policy groups: the only axis that forks a compiled program.
+    # --- launch units: policy groups (the only axis that forks traced
+    # control flow) × buckets (padded shapes fork programs within one
+    # group's jit cache).  Outer order is group insertion order, inner is
+    # ascending bucket, so the single-bucket path enumerates units exactly
+    # like the pre-bucketing group loop.
     groups: Dict[tuple, List[int]] = {}
     for ci, c in enumerate(cells):
         key = _policy_group_key(FleetJob(scenario=c.scenario,
                                          policy=c.policy, eps_b=c.eps_b,
                                          topo_seed=c.topo_seed))
         groups.setdefault(key, []).append(ci)
+    units: List[Tuple[tuple, int, List[int], bool]] = []
+    for gkey, cidx_g in groups.items():
+        by_bucket: Dict[int, List[int]] = {}
+        for ci in cidx_g:
+            by_bucket.setdefault(cell_bucket[ci], []).append(ci)
+        bs = sorted(by_bucket)
+        for b in bs:
+            units.append((gkey, b, by_bucket[b], b == bs[-1]))
 
     rt = resumed = None
     if resilience is not None:
@@ -243,13 +324,18 @@ def sweep_lambda_max(cells: Sequence[AtlasJob], *,
                                 seeds=seeds, T=T, chunk=chunk, window=window,
                                 rel_tol=rel_tol, bracket=tuple(bracket),
                                 max_calls=max_calls, early_stop=early_stop,
-                                verdict=vcfg, dims=dims, ndev=ndev)
+                                verdict=vcfg, dims=tuple(bucket_dims),
+                                n_buckets=n_buckets,
+                                max_requeues=max_requeues, ndev=ndev)
         resumed = rt.resumed
 
     rows: List[AtlasRow | None] = [None] * len(cells)
+    attempt: List[int] = [0] * len(cells)
     n_launches = seq_launches = n_rewrites = 0
     launch_slots_saved = 0
     n_step_compiles = 0
+    n_requeues = 0
+    bucket_launches: Dict[int, int] = {b: 0 for b in range(len(bucket_dims))}
     eff_T = eff_chunk = 0
     degraded: Dict[int, str] = {}
     recovery = None
@@ -260,22 +346,27 @@ def sweep_lambda_max(cells: Sequence[AtlasJob], *,
                           append=resumed is not None)
     if resumed is not None:
         # Host scheduler restore: every cell's machine (cells in already-
-        # finished groups carry their final state; unstarted ones their
+        # finished units carry their final state; unstarted ones their
         # initial state — both re-serialize identically), finished rows,
-        # and the launch counters.
+        # attempt counters, and the launch counters.
         for ci_s, ms in resumed["machines"].items():
             machines[int(ci_s)] = Bisection.from_state(ms)
         for ci_s, rs in resumed["rows"].items():
             rows[int(ci_s)] = rz.row_restore(rs)
+        for ci_s, a in resumed["attempt"].items():
+            attempt[int(ci_s)] = int(a)
         n_launches = resumed["n_launches"]
         seq_launches = resumed["seq_launches"]
         n_rewrites = resumed["n_rewrites"]
         launch_slots_saved = resumed["launch_slots_saved"]
         n_step_compiles = resumed["n_step_compiles"]
+        n_requeues = resumed["n_requeues"]
+        bucket_launches.update(
+            {int(b): int(n) for b, n in resumed["bucket_launches"].items()})
         degraded = {int(k): v for k, v in resumed["degraded"].items()}
         recovery = rz.plan_restore(resumed["recovery"])
 
-    for g, (gkey, cidx) in enumerate(groups.items()):
+    for g, (gkey, bkt, cidx, group_last) in enumerate(units):
         cfg = FleetJob(scenario=cells[cidx[0]].scenario,
                        policy=cells[cidx[0]].policy,
                        eps_b=cells[cidx[0]].eps_b,
@@ -321,11 +412,16 @@ def sweep_lambda_max(cells: Sequence[AtlasJob], *,
         active: set = set()
 
         def _assign(ci: int, k: int) -> None:
+            # call_index = attempt: first-attempt probes replay the exact
+            # sequential fold_seed stream (call_index 0); adaptive re-probes
+            # draw from the documented re-probe stream so doubled-horizon
+            # evidence never aliases the evidence that failed to decide.
             pending[ci] = k
             chunks_used[ci] = 0
             sl = lane_of[ci]
             lam_host[sl] = np.float32(k * steps[ci])
-            seed_host[sl] = [fold_seed(cells[ci].topo_seed, k, 0, s)
+            seed_host[sl] = [fold_seed(cells[ci].topo_seed, k,
+                                       attempt[ci], s)
                              for s in seeds]
 
         resume_here = resumed is not None and g == resumed["group"]
@@ -351,7 +447,7 @@ def sweep_lambda_max(cells: Sequence[AtlasJob], *,
                 k = machines[ci].next_rate_index()
                 if k is None:       # degenerate budget: decided probe-free
                     rows[ci] = _finish_row(cells[ci], bounds[ci], steps[ci],
-                                           machines[ci], [])
+                                           machines[ci], [], bucket=bkt)
                     park0[lane_of[ci]] = True
                 else:
                     active.add(ci)
@@ -387,6 +483,7 @@ def sweep_lambda_max(cells: Sequence[AtlasJob], *,
                 carry = step_fn(pp, lam, eps, ak, ek, keys, carry)
             n_launches += 1
             g_launches += 1
+            bucket_launches[bkt] += 1
             for ci in active:
                 chunks_used[ci] += 1
 
@@ -415,7 +512,8 @@ def sweep_lambda_max(cells: Sequence[AtlasJob], *,
                             park[sl] = True
                             rows[ci] = _finish_row(
                                 cells[ci], bounds[ci], steps[ci],
-                                machines[ci], probes_of[ci], degraded=True)
+                                machines[ci], probes_of[ci], degraded=True,
+                                bucket=bkt, n_requeues=attempt[ci])
                             hosts = sorted({l // per
                                             for l in range(sl.start, sl.stop)
                                             if lane_dead[l]})
@@ -429,37 +527,71 @@ def sweep_lambda_max(cells: Sequence[AtlasJob], *,
             for ci in sorted(active):
                 sl = lane_of[ci]
                 v = verdicts[sl]
-                finished = chunks_used[ci] >= n_chunks or (
+                # Adaptive horizon: attempt a probes up to n_chunks << a
+                # launches — verdict latching lives in the window config,
+                # not T, so a doubled horizon is just more chunk launches
+                # of the same program.
+                horizon = n_chunks << attempt[ci]
+                finished = chunks_used[ci] >= horizon or (
                     early_stop and bool(np.all(v != VERDICT_UNDECIDED)))
                 if not finished:
                     continue
                 # --- harvest: the exact RateProbe the sequential path
                 # would have built from run_fleet's finalize metrics.
                 k = pending[ci]
+                cell_T = runner.T << attempt[ci]
                 names = tuple(VERDICT_NAMES[int(x)] for x in v)
                 sustainable = all(n == "STABLE" for n in names)
                 d_eff = np.where(v != VERDICT_UNDECIDED,
-                                 decided_at[sl], runner.T)
-                saved = (int(np.sum(runner.T - d_eff)) if vcfg.freeze
+                                 decided_at[sl], cell_T)
+                saved = (int(np.sum(cell_T - d_eff)) if vcfg.freeze
                          else 0)
                 probes_of[ci].append(RateProbe(
-                    rate_index=k, call_index=0, lam=k * steps[ci],
+                    rate_index=k, call_index=attempt[ci],
+                    lam=k * steps[ci],
                     sustainable=sustainable, verdicts=names,
                     decided_at=tuple(int(x) for x in d_eff),
-                    slots_run=S * runner.T - saved, slots_saved=saved,
+                    slots_run=S * cell_T - saved, slots_saved=saved,
                     undecided=not sustainable and "UNSTABLE" not in names))
                 seq_launches += chunks_used[ci]
                 launch_slots_saved += \
-                    S * (n_chunks - chunks_used[ci]) * runner.chunk
+                    S * (horizon - chunks_used[ci]) * runner.chunk
                 machines[ci].record(k, sustainable,
                                     probes_of[ci][-1].undecided)
                 k2 = machines[ci].next_rate_index()
+                if k2 is None and (machines[ci].undecided_hi
+                                   or machines[ci].k_lo == 0) \
+                        and attempt[ci] < max_requeues:
+                    # Re-queue (DESIGN.md §13): either the bracket top is
+                    # blocked by UNDECIDED-at-horizon evidence only, or
+                    # the bracket fully collapsed (k_lo == 0: no rate
+                    # proved sustainable).  The collapse case covers the
+                    # low-rate false-UNSTABLE artifact — at rates far
+                    # below capacity the backpressure gradient fills so
+                    # slowly that the whole horizon sits inside the
+                    # transient and the drift + gap tests both latch
+                    # UNSTABLE (paper_grid topo_seeds 5/8/15 at T=4096
+                    # read proven-UNSTABLE at 0.1x their own exact
+                    # bound); genuinely-capacity-0 cells (wireless_grid)
+                    # burn the re-queue ladder and still report 0, which
+                    # the bench asserts.  Restart the whole search from
+                    # the original integer bracket with a doubled chunk
+                    # budget instead of reporting the collapsed bracket.
+                    # The fresh machine replays the deterministic probe
+                    # order; _assign stamps the bumped call_index into
+                    # every fold_seed.
+                    attempt[ci] += 1
+                    n_requeues += 1
+                    machines[ci] = Bisection(k_lo=k_lo0[ci], k_hi=k_hi0[ci],
+                                             max_calls=max_calls)
+                    k2 = machines[ci].next_rate_index()
                 if k2 is None:
                     active.discard(ci)
                     park[sl] = True
                     rows[ci] = _finish_row(cells[ci], bounds[ci],
                                            steps[ci], machines[ci],
-                                           probes_of[ci])
+                                           probes_of[ci], bucket=bkt,
+                                           n_requeues=attempt[ci])
                 else:
                     reset[sl] = True
                     _assign(ci, k2)
@@ -477,15 +609,17 @@ def sweep_lambda_max(cells: Sequence[AtlasJob], *,
                 n_rewrites += 1
             if sink is not None:
                 sink.write(_atlas_record(
-                    g, g_launches, runner.chunk, B, cells, cidx, active,
-                    machines, steps, bounds, probes_of, verdicts[:B]))
+                    g, bkt, n_requeues, g_launches, runner.chunk, B, cells,
+                    cidx, active, machines, steps, bounds, probes_of,
+                    verdicts[:B]))
 
             if rt is not None and rt.should_snapshot(n_launches):
                 rt.snapshot(n_launches, carry, _atlas_extra(
                     g, g_launches, n_launches, seq_launches, n_rewrites,
                     launch_slots_saved, n_step_compiles, machines, rows,
                     pending, chunks_used, probes_of, cidx, lam_host,
-                    seed_host, active, degraded, recovery))
+                    seed_host, active, degraded, recovery, attempt,
+                    n_requeues, bucket_launches))
             if rt is not None:
                 try:
                     rt.maybe_preempt(n_launches)
@@ -494,28 +628,36 @@ def sweep_lambda_max(cells: Sequence[AtlasJob], *,
                         sink.close()
                     raise
 
-        try:
-            n_step_compiles += int(step_fn._cache_size())
-        except Exception:  # pragma: no cover - private API moved
-            n_step_compiles = -10 ** 6
+        if group_last:
+            # One readout per policy group, after its *last* bucket: the
+            # jit cache holds one trace per bucket shape, so summing per
+            # bucket would double-count earlier buckets of the same group.
+            try:
+                n_step_compiles += int(step_fn._cache_size())
+            except Exception:  # pragma: no cover - private API moved
+                n_step_compiles = -10 ** 6
 
         if rt is not None and rt.should_snapshot(n_launches):
-            # Group-end marker: empty carry, cursor at the next group's
+            # Unit-end marker: empty carry, cursor at the next unit's
             # start — a resume here re-enters the fresh path with the
             # restored machines re-pulling the same deterministic grid.
             rt.snapshot(n_launches, (), _atlas_extra(
                 g + 1, 0, n_launches, seq_launches, n_rewrites,
                 launch_slots_saved, n_step_compiles, machines, rows,
                 {}, {}, {ci: [] for ci in cidx}, cidx, lam_host,
-                seed_host, set(), degraded, recovery))
+                seed_host, set(), degraded, recovery, attempt,
+                n_requeues, bucket_launches))
 
     if sink is not None:
         sink.close()
     done_rows = [r for r in rows if r is not None]
     assert len(done_rows) == len(cells)
+    n_bucket_cells: Dict[int, int] = {}
+    for b in cell_bucket:
+        n_bucket_cells[b] = n_bucket_cells.get(b, 0) + 1
     return AtlasResult(
         rows=done_rows, n_cells=len(cells), n_lanes=len(cells) * S,
-        n_programs=len(groups), n_launches=n_launches,
+        n_programs=len(units), n_launches=n_launches,
         seq_launches=seq_launches, n_rewrites=n_rewrites,
         n_step_compiles=n_step_compiles,
         total_slots=sum(r.total_slots for r in done_rows),
@@ -527,18 +669,47 @@ def sweep_lambda_max(cells: Sequence[AtlasJob], *,
         resumed_from=(resumed["n_launches"] if resumed is not None
                       else None),
         degraded=degraded, recovery_plan=recovery,
-        n_fault_retries=rt.n_retries if rt is not None else 0)
+        n_fault_retries=rt.n_retries if rt is not None else 0,
+        bucket_dims=list(bucket_dims),
+        bucket_cells=n_bucket_cells,
+        bucket_launches=dict(bucket_launches),
+        n_requeues=n_requeues)
+
+
+def sweep_policy_surface(families: Sequence[str],
+                         topo_seeds: Sequence[int], *,
+                         policies: Sequence[str] = ("pi3", "pi3_reg",
+                                                    "pi3bar"),
+                         eps_b: float = 0.01, **kw) -> AtlasResult:
+    """Atlas-over-policies: one sweep of (policy × family × topo_seed).
+
+    Every policy runs the *same* grid of topologies against the same
+    per-cell exact bounds, so ratio gaps between policies are pure policy
+    effects — the λ_max surface the in-network placement literature
+    compares on.  Policies that fork traced control flow
+    (`_policy_group_key`) land in separate launch units automatically;
+    policies that trace identically (pi3 vs pi3_reg) share one program
+    and differ only in data.  Pivot the rows with
+    `report.policy_surface_table`.  Keyword args pass through to
+    `sweep_lambda_max` (seeds, T, chunk, n_buckets, max_requeues, ...).
+    """
+    cells = [AtlasJob(scenario=f, policy=p, topo_seed=int(ts), eps_b=eps_b)
+             for p in policies for f in families for ts in topo_seeds]
+    return sweep_lambda_max(cells, **kw)
 
 
 def _atlas_extra(group, g_launches, n_launches, seq_launches, n_rewrites,
                  launch_slots_saved, n_step_compiles, machines, rows,
                  pending, chunks_used, probes_of, cidx, lam_host,
-                 seed_host, active, degraded, recovery) -> dict:
+                 seed_host, active, degraded, recovery, attempt,
+                 n_requeues, bucket_launches) -> dict:
     """JSON-serializable sweep cursor for one checkpoint (DESIGN.md §12).
 
-    Machines and finished rows are global (every cell, so already-finished
-    groups restore without replay); the lane tables and pending probes are
-    the current group's only."""
+    Machines, finished rows and attempt counters are global (every cell,
+    so already-finished units restore without replay); the lane tables
+    and pending probes are the current (group × bucket) unit's only.
+    ``group`` is the unit cursor — the bucket identity is implied by the
+    deterministic unit enumeration."""
     from repro.runtime import resilience as rz
 
     return {
@@ -547,10 +718,14 @@ def _atlas_extra(group, g_launches, n_launches, seq_launches, n_rewrites,
         "n_rewrites": n_rewrites,
         "launch_slots_saved": launch_slots_saved,
         "n_step_compiles": n_step_compiles,
+        "n_requeues": n_requeues,
+        "bucket_launches": {str(b): int(n)
+                            for b, n in bucket_launches.items()},
         "machines": {str(ci): m.to_state()
                      for ci, m in enumerate(machines)},
         "rows": {str(ci): rz.row_state(r)
                  for ci, r in enumerate(rows) if r is not None},
+        "attempt": {str(ci): int(a) for ci, a in enumerate(attempt)},
         "pending": {str(ci): int(k) for ci, k in pending.items()},
         "chunks_used": {str(ci): int(n) for ci, n in chunks_used.items()},
         "probes": {str(ci): [rz.probe_state(p) for p in probes_of[ci]]
@@ -563,13 +738,16 @@ def _atlas_extra(group, g_launches, n_launches, seq_launches, n_rewrites,
     }
 
 
-def _atlas_record(group: int, g_launches: int, chunk: int, n_real: int,
+def _atlas_record(group: int, bucket: int, n_requeues: int,
+                  g_launches: int, chunk: int, n_real: int,
                   cells, cidx, active, machines, steps, bounds, probes_of,
                   lane_verdicts: np.ndarray) -> dict:
     """One launch's bisection-progress record, assembled from the host
     scheduler state (DESIGN.md §11).  ``t`` is the per-lane dispatch count
     (launches × chunk): lane carries reset their slot clock on probe
-    rewrites, so the carry's own t is not a usable stream clock."""
+    rewrites, so the carry's own t is not a usable stream clock.
+    ``group`` is the (policy group × bucket) unit cursor; ``bucket`` names
+    the PadDims bucket the unit runs in (DESIGN.md §13)."""
     from repro.obs import schema
 
     def rel(ci, k):
@@ -591,7 +769,8 @@ def _atlas_record(group: int, g_launches: int, chunk: int, n_real: int,
     v = lane_verdicts.astype(int)
     return schema.make_record(
         "atlas",
-        group=group, chunk=g_launches - 1, t=g_launches * chunk,
+        group=group, bucket=bucket, n_requeues=n_requeues,
+        chunk=g_launches - 1, t=g_launches * chunk,
         n_sims=n_real,
         n_active_cells=len(active),
         n_done_cells=len(cidx) - len(active),
@@ -604,7 +783,8 @@ def _atlas_record(group: int, g_launches: int, chunk: int, n_real: int,
 
 def _finish_row(cell: AtlasJob, bound: float, step: float, bis: Bisection,
                 probes: Sequence[RateProbe],
-                degraded: bool = False) -> AtlasRow:
+                degraded: bool = False, bucket: int = 0,
+                n_requeues: int = 0) -> AtlasRow:
     full = sum(p.slots_run + p.slots_saved for p in probes)
     run_slots = sum(p.slots_run for p in probes)
     return AtlasRow(
@@ -619,4 +799,5 @@ def _finish_row(cell: AtlasJob, bound: float, step: float, bis: Bisection,
                     else bis.k_hi_certain * step),
         total_slots=run_slots, full_slots=full,
         slots_saved=full - run_slots,
-        probes=tuple(probes), degraded=degraded)
+        probes=tuple(probes), degraded=degraded,
+        bucket=bucket, n_requeues=n_requeues)

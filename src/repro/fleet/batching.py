@@ -31,7 +31,7 @@ and class counts stay static (pytree aux data) so shapes remain concrete.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Dict, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -93,6 +93,13 @@ class PaddedProblem:
             comp_mask=self.comp_mask * (comp_scale > 0.0).astype(jnp.float32))
 
 
+def problem_shape(problem: ComputeProblem) -> Tuple[int, int, int]:
+    """The (n_nodes, n_edges, n_comp) shape of one instance — the axes
+    padding has to cover."""
+    return (int(problem.graph.n_nodes), int(problem.graph.n_edges),
+            int(problem.n_comp))
+
+
 @dataclasses.dataclass(frozen=True)
 class PadDims:
     n_nodes: int
@@ -101,11 +108,90 @@ class PadDims:
 
     @staticmethod
     def of(problems: Sequence[ComputeProblem]) -> "PadDims":
+        problems = list(problems)
+        if not problems:
+            raise ValueError(
+                "PadDims.of: empty problem sequence — there is nothing to "
+                "take shape maxima over (did a scenario/topo_seed grid "
+                "expand to zero cells?)")
         return PadDims(
             n_nodes=max(p.graph.n_nodes for p in problems),
             n_edges=max(p.graph.n_edges for p in problems),
             n_comp=max(p.n_comp for p in problems),
         )
+
+    def fits(self, problem: ComputeProblem) -> bool:
+        n, e, nc = problem_shape(problem)
+        return n <= self.n_nodes and e <= self.n_edges and nc <= self.n_comp
+
+
+def make_buckets(problems: Sequence[ComputeProblem],
+                 n_buckets: int = 1
+                 ) -> Tuple[List[PadDims], List[int]]:
+    """Partition problems into size buckets with per-bucket `PadDims`.
+
+    Returns ``(bucket_dims, assignment)`` where ``assignment[i]`` is the
+    bucket index of ``problems[i]`` and ``bucket_dims[b]`` covers every
+    problem assigned to bucket ``b``.  Breakpoints are quantiles of a
+    lexicographic (n_edges, n_nodes, n_comp) size key — edges first
+    because the [E, 2] routing arrays dominate the padded slot cost — so
+    a 500-node expander stops inflating every 16-node ring (DESIGN.md
+    §13).  Problems with identical shapes always share a bucket, empty
+    quantile bins are dropped, and each bucket's dims are the maxima over
+    its own members, so every problem fits its bucket by construction
+    (re-checked by `validate_buckets`).  ``n_buckets=1`` reproduces the
+    single global `PadDims.of` hull exactly.
+    """
+    problems = list(problems)
+    if not problems:
+        raise ValueError("make_buckets: empty problem sequence")
+    n_buckets = max(1, int(n_buckets))
+    shapes = np.array([problem_shape(p) for p in problems], np.int64)
+    # Lexicographic (E, N, NC) packed into one int64 so quantiles of the
+    # scalar respect the full ordering (shifts leave 2^23 headroom per axis).
+    key = (shapes[:, 1] << 40) | (shapes[:, 0] << 20) | shapes[:, 2]
+    cuts = [int(np.quantile(key, (b + 1) / n_buckets, method="lower"))
+            for b in range(n_buckets - 1)]
+    raw = np.zeros(len(problems), np.int64)
+    for c in cuts:
+        raw += key > c
+    dense: Dict[int, int] = {}
+    for r in sorted(set(raw.tolist())):
+        dense[r] = len(dense)
+    assignment = [dense[int(r)] for r in raw]
+    bucket_dims = []
+    for b in range(len(dense)):
+        members = [p for p, a in zip(problems, assignment) if a == b]
+        bucket_dims.append(PadDims.of(members))
+    validate_buckets(problems, bucket_dims, assignment)
+    return bucket_dims, assignment
+
+
+def validate_buckets(problems: Sequence[ComputeProblem],
+                     bucket_dims: Sequence[PadDims],
+                     assignment: Sequence[int]) -> None:
+    """Check every problem fits its assigned bucket's dims.
+
+    Raises an actionable `ValueError` naming the offending instance shape
+    and the bucket dims it overflows — the bucketed-atlas contract
+    (DESIGN.md §13) is that a cell is *never* silently truncated."""
+    if len(problems) != len(assignment):
+        raise ValueError(
+            f"validate_buckets: {len(problems)} problems but "
+            f"{len(assignment)} bucket assignments")
+    for i, (p, b) in enumerate(zip(problems, assignment)):
+        if not 0 <= b < len(bucket_dims):
+            raise ValueError(
+                f"validate_buckets: problem {i} assigned to bucket {b}, "
+                f"but only {len(bucket_dims)} buckets exist")
+        d = bucket_dims[b]
+        if not d.fits(p):
+            n, e, nc = problem_shape(p)
+            raise ValueError(
+                f"validate_buckets: problem {i} with shape (n_nodes={n}, "
+                f"n_edges={e}, n_comp={nc}) exceeds bucket {b} dims "
+                f"(n_nodes={d.n_nodes}, n_edges={d.n_edges}, "
+                f"n_comp={d.n_comp})")
 
 
 def pad_problem(problem: ComputeProblem, dims: PadDims) -> PaddedProblem:
@@ -113,7 +199,12 @@ def pad_problem(problem: ComputeProblem, dims: PadDims) -> PaddedProblem:
     sp = StaticProblem.build(problem)
     N, E, NC = dims.n_nodes, dims.n_edges, dims.n_comp
     e, nc = sp.edges.shape[0], sp.n_comp
-    assert sp.n_nodes <= N and e <= E and nc <= NC, "instance exceeds pad dims"
+    if sp.n_nodes > N or e > E or nc > NC:
+        raise ValueError(
+            f"pad_problem: instance shape (n_nodes={sp.n_nodes}, "
+            f"n_edges={e}, n_comp={nc}) exceeds pad dims (n_nodes={N}, "
+            f"n_edges={E}, n_comp={NC}) — pass PadDims.of over every "
+            f"problem in the batch (or its bucket)")
 
     edges = np.zeros((E, 2), np.int32)               # padding: self-loop (0,0)
     edges[:e] = sp.edges

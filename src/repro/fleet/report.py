@@ -20,12 +20,18 @@ NOT the plain Theorem-4 `lam_star`.  Two bounds exist (DESIGN.md §6):
     constraint; when computation capacity binds (the paper grid) the dummy
     inflation rides free link slack and `bound_exact == lam_star`.
 
-Exact solves are LRU-cached per (scenario, topo_seed, rho0), so a sweep
-over policies x rates x seeds re-solves nothing.
+Exact solves are cached on the **canonical problem fingerprint** (a
+content hash of the LP-determining data: graph edges/capacities, sources,
+destination, comp placement/capacities, rho0), bounded LRU — so a sweep
+over policies x rates x seeds re-solves nothing, a thousand topo_seeds of
+a seed-independent family (fat_tree, paper_grid, ...) collapse to *one*
+LP solve, and the cache cannot grow past `LP_CACHE_MAX` entries at
+atlas scale (DESIGN.md §13).
 """
 from __future__ import annotations
 
-import functools
+import collections
+import hashlib
 from typing import Dict, List, Sequence
 
 import numpy as np
@@ -46,16 +52,75 @@ def policy_bound(lam_star: float, policy: str, eps_b: float) -> float:
     return float(lam_star) / PolicyConfig(name=policy, eps_b=eps_b).rho0
 
 
-@functools.lru_cache(maxsize=1024)
+#: Hard bound on cached LP scalars.  At thousands of random topo_seeds
+#: the old per-(scenario, topo_seed, rho0) LRU kept one entry per cell;
+#: the fingerprint-keyed cache both dedupes seed-independent families and
+#: evicts least-recently-used entries past this bound.
+LP_CACHE_MAX = 4096
+
+_LP_CACHE: "collections.OrderedDict[tuple, float]" = collections.OrderedDict()
+_LP_STATS = {"hits": 0, "misses": 0}
+_CacheInfo = collections.namedtuple("CacheInfo",
+                                    ["hits", "misses", "maxsize", "currsize"])
+
+
+def problem_fingerprint(problem, rho0: float = 1.0) -> str:
+    """Canonical content hash of the data that determines the regulated
+    capacity LP: graph shape, edges, capacities, sources/destination, comp
+    placement/capacities, and rho0.  Two (scenario, topo_seed) cells that
+    build the same instance — every seed of a deterministic family — hash
+    identically, which is what lets the atlas solve each *distinct* LP
+    once (DESIGN.md §13)."""
+    h = hashlib.sha256()
+    g = problem.graph
+    h.update(np.int64([g.n_nodes, problem.s1, problem.s2,
+                       problem.dest]).tobytes())
+    h.update(np.ascontiguousarray(g.edges, np.int64).tobytes())
+    h.update(np.ascontiguousarray(g.capacity, np.float64).tobytes())
+    h.update(np.asarray(problem.comp_nodes, np.int64).tobytes())
+    h.update(np.asarray(problem.comp_caps, np.float64).tobytes())
+    h.update(np.float64([rho0]).tobytes())
+    return h.hexdigest()
+
+
 def exact_lam_star(scenario: str, topo_seed: int, rho0: float) -> float:
     """Exact (possibly regulated) LP capacity of one scenario instance.
 
-    Solves `capacity_upper_bound(scenario.build(topo_seed), rho0=rho0)` and
-    caches the scalar per (scenario, topo_seed, rho0) — the key is the
-    *data* that determines the LP, so sweeps over policies, rates, and
-    seeds hit the cache (`exact_lam_star.cache_info()`)."""
+    Solves `capacity_upper_bound(scenario.build(topo_seed), rho0=rho0)`
+    and caches the scalar under the canonical `problem_fingerprint` — the
+    key is the *data* that determines the LP, so sweeps over policies,
+    rates, and seeds hit the cache, and distinct topo_seeds of a
+    seed-independent topology share one solve.  The cache is a bounded
+    LRU (`LP_CACHE_MAX`); `exact_lam_star.cache_info()` /
+    `.cache_clear()` keep the `functools.lru_cache` introspection
+    surface (misses == LP solves actually performed)."""
     problem = get_scenario(scenario).build(topo_seed)
-    return float(capacity_upper_bound(problem, rho0=rho0).lam_star)
+    key = ("lam_star", problem_fingerprint(problem, rho0))
+    hit = _LP_CACHE.get(key)
+    if hit is not None:
+        _LP_CACHE.move_to_end(key)
+        _LP_STATS["hits"] += 1
+        return hit
+    _LP_STATS["misses"] += 1
+    val = float(capacity_upper_bound(problem, rho0=rho0).lam_star)
+    _LP_CACHE[key] = val
+    while len(_LP_CACHE) > LP_CACHE_MAX:
+        _LP_CACHE.popitem(last=False)
+    return val
+
+
+def _lp_cache_info() -> _CacheInfo:
+    return _CacheInfo(_LP_STATS["hits"], _LP_STATS["misses"],
+                      LP_CACHE_MAX, len(_LP_CACHE))
+
+
+def _lp_cache_clear() -> None:
+    _LP_CACHE.clear()
+    _LP_STATS["hits"] = _LP_STATS["misses"] = 0
+
+
+exact_lam_star.cache_info = _lp_cache_info
+exact_lam_star.cache_clear = _lp_cache_clear
 
 
 def policy_bound_exact(scenario: str, policy: str, eps_b: float,
@@ -104,28 +169,46 @@ def sweep_jobs(scenario_policies: Dict[str, Sequence[str]],
     return jobs
 
 
+def _ratio_band(ratios: np.ndarray) -> dict:
+    """The per-family λ_max confidence band (DESIGN.md §13): q10/q90 of
+    the ratio distribution over the family's (cell × topo_seed) rows plus
+    the band width.  Quantiles use the ``lower`` method so the band is a
+    pair of *measured* cell ratios (deterministic, dispatch-order
+    invariant) rather than an interpolation artifact."""
+    q10 = float(np.quantile(ratios, 0.10, method="lower"))
+    q90 = float(np.quantile(ratios, 0.90, method="lower"))
+    return {"q10": q10, "q90": q90, "width": q90 - q10}
+
+
 def atlas_table(result) -> dict:
-    """JSON-serializable capacity-atlas table (DESIGN.md §10).
+    """JSON-serializable capacity-atlas table (DESIGN.md §10, §13).
 
     Takes an `atlas.AtlasResult` (duck-typed: anything with its fields
     works, which keeps this module import-free of `fleet.atlas`) and
     summarizes the measured-vs-LP frontier per scenario family: ratio
-    median/min/max over the family's cells, how many cells ended
-    UNDECIDED at the bracket top (horizon-limited localization,
-    DESIGN.md §8) vs proven UNSTABLE, plus the fleet-level launch
-    accounting the atlas bench gates on."""
+    median/min/max and the q10–q90 seed-replication band over the
+    family's cells, how many cells ended UNDECIDED at the bracket top
+    (horizon-limited localization, DESIGN.md §8) vs proven UNSTABLE, how
+    many were rescued by adaptive re-queues, plus the fleet-level
+    launch + bucket accounting the atlas bench gates on."""
     fam: Dict[str, list] = {}
     for r in result.rows:
         fam.setdefault(r.scenario, []).append(r)
     families = {}
-    for scen, rows in fam.items():
+    # Canonical order — (policy, topo_seed) within a family, families by
+    # name — so the table is invariant to cell dispatch order and seed-
+    # band entries diff cleanly in CI (DESIGN.md §13).
+    for scen in sorted(fam):
+        rows = sorted(fam[scen], key=lambda r: (r.policy, r.topo_seed))
         ratios = np.array([r.ratio for r in rows])
         families[scen] = {
             "n_cells": len(rows),
             "ratio_median": float(np.median(ratios)),
             "ratio_min": float(ratios.min()),
             "ratio_max": float(ratios.max()),
+            "band": _ratio_band(ratios),
             "n_undecided_hi": int(sum(r.undecided for r in rows)),
+            "n_requeued": int(sum(r.n_requeues > 0 for r in rows)),
             "n_calls_mean": float(np.mean([r.n_calls for r in rows])),
             "bound_exact_mean": float(np.mean([r.bound_exact
                                                for r in rows])),
@@ -134,7 +217,8 @@ def atlas_table(result) -> dict:
                  "bound_exact": r.bound_exact, "ratio": r.ratio,
                  "lo": r.lo, "hi": r.hi, "n_calls": r.n_calls,
                  "undecided_hi": bool(r.undecided),
-                 "hi_certain": r.hi_certain}
+                 "hi_certain": r.hi_certain,
+                 "bucket": r.bucket, "n_requeues": r.n_requeues}
                 for r in rows],
         }
     return {
@@ -152,8 +236,57 @@ def atlas_table(result) -> dict:
         "pad_dims": {"n_nodes": result.dims.n_nodes,
                      "n_edges": result.dims.n_edges,
                      "n_comp": result.dims.n_comp},
+        "n_buckets": result.n_buckets,
+        "bucket_dims": [{"n_nodes": d.n_nodes, "n_edges": d.n_edges,
+                         "n_comp": d.n_comp}
+                        for d in result.bucket_dims],
+        "bucket_cells": {str(b): int(n)
+                         for b, n in sorted(result.bucket_cells.items())},
+        "bucket_launches": {str(b): int(n)
+                            for b, n in
+                            sorted(result.bucket_launches.items())},
+        "n_requeues": result.n_requeues,
         "T": result.T, "chunk": result.chunk,
         "families": families,
+    }
+
+
+def policy_surface_table(result) -> dict:
+    """Pivot an atlas-over-policies sweep (`atlas.sweep_policy_surface`)
+    into the policy-surface table: per (policy × family) ratio medians and
+    q10–q90 bands over the shared topology grid, so policies compare on
+    identical cells against identical exact bounds (DESIGN.md §13).  The
+    per-family ``gap_vs`` entries report each policy's median-ratio gap
+    to the best policy on that family."""
+    surf: Dict[str, Dict[str, list]] = {}
+    for r in result.rows:
+        surf.setdefault(r.policy, {}).setdefault(r.scenario, []).append(r)
+    policies = {}
+    for pol in sorted(surf):        # canonical order, like atlas_table
+        fams = surf[pol]
+        entry = {}
+        for scen in sorted(fams):
+            rows = fams[scen]
+            ratios = np.array([r.ratio for r in rows])
+            entry[scen] = {
+                "n_cells": len(rows),
+                "ratio_median": float(np.median(ratios)),
+                "band": _ratio_band(ratios),
+                "n_undecided_hi": int(sum(r.undecided for r in rows)),
+            }
+        policies[pol] = entry
+    fam_names = sorted({s for fams in surf.values() for s in fams})
+    best = {scen: max(policies[p][scen]["ratio_median"]
+                      for p in policies if scen in policies[p])
+            for scen in fam_names}
+    for pol, entry in policies.items():
+        for scen, row in entry.items():
+            row["gap_vs_best"] = best[scen] - row["ratio_median"]
+    return {
+        "n_cells": result.n_cells,
+        "n_policies": len(policies),
+        "families": fam_names,
+        "policies": policies,
     }
 
 

@@ -21,11 +21,16 @@ Three properties follow:
     blocks on the probe values.  Callbacks drain on JAX's background
     callback thread; `jax.effects_barrier()` (inside `close()`) is the
     flush point before results are read.
-  * **Donation-safe by dispatch order.**  The emit program is enqueued
-    *before* the next chunk launch that donates (aliases) the carry
-    buffers; per-device in-order execution on the CPU/TPU runtimes then
-    guarantees the read completes before the donated write lands — the
-    same ordering the engines' existing verdict readouts rely on.
+  * **Donation-safe by copy.**  The emit program snapshots every probe
+    leaf (`jnp.copy` after replication) before handing it to the
+    callback, so the io_callback operand is a fresh buffer that no later
+    donating launch can alias.  Relying on per-device in-order execution
+    alone (the pre-fix behavior) is unsafe on GPU runtimes, where the
+    async callback read can race the next launch's donated overwrite of
+    the same carry buffer; the copy makes the tap correct on every
+    backend while staying off the hot path (it is dispatched, never
+    awaited).  `tests/test_obs.py` asserts telemetry-on runs stay
+    bit-identical with the copy in place.
 
 Handle routing keeps the program count at one per (mesh, leaf structure):
 every live `ChunkEmitter` registers its record-assembly callback in the
@@ -67,18 +72,22 @@ def _route(handle, leaves) -> None:
 
 @functools.lru_cache(maxsize=64)
 def _emit_fn(mesh: Mesh):
-    """The per-mesh emit program: replicate leaves, hand them to the
-    ordered io_callback.  Replication (`with_sharding_constraint` to
+    """The per-mesh emit program: replicate + *copy* leaves, hand them to
+    the ordered io_callback.  Replication (`with_sharding_constraint` to
     `P()`) is what lets the callback consume mesh-sharded probe leaves
-    without XLA's involuntary-rematerialization warning; `ordered=True`
-    keeps records in dispatch order, which is what makes the consecutive
-    probe *differencing* in the record assemblers correct."""
+    without XLA's involuntary-rematerialization warning; the `jnp.copy`
+    decouples the callback operand from the donated carry buffers so the
+    async host read cannot race the next launch's aliased overwrite
+    (GPU-unsafe otherwise — module docstring); `ordered=True` keeps
+    records in dispatch order, which is what makes the consecutive probe
+    *differencing* in the record assemblers correct."""
     rep = NamedSharding(mesh, P())
 
     @jax.jit
     def emit(handle, leaves):
         leaves = jax.tree_util.tree_map(
-            lambda v: jax.lax.with_sharding_constraint(v, rep), leaves)
+            lambda v: jnp.copy(jax.lax.with_sharding_constraint(v, rep)),
+            leaves)
         io_callback(_route, None, handle, leaves, ordered=True)
 
     return emit

@@ -10,7 +10,11 @@ a writer mid-append — is simply ignored until the next tick.
 
 The rolling-median window is the HomebrewNLP wandblog idiom: a bounded
 deque per metric, re-aggregated with a median every render, so one noisy
-chunk cannot spike the displayed rate.
+chunk cannot spike the displayed rate.  An *empty* window is NaN, never
+0.0 — ``drift_med 0.0`` is the stability boundary, so rendering it
+before the first record arrives would paint an alert-adjacent number out
+of thin air; empty windows render as ``—`` and the alert checks
+(``drift_med`` crossing 0, ``shed_frac`` spikes) skip them entirely.
 
 Console entry point: ``capacity_report`` (pyproject ``[project.scripts]``)
 or ``python -m repro.obs.follow``.
@@ -19,6 +23,7 @@ from __future__ import annotations
 
 import argparse
 import glob
+import math
 import sys
 import time
 from collections import deque
@@ -27,9 +32,20 @@ from typing import Dict, Iterable, List, Sequence
 
 from . import schema
 
+#: shed_frac level below which a spike is never alerted (noise floor).
+SHED_SPIKE_FLOOR = 0.05
+#: spike = latest shed_frac_med > SHED_SPIKE_RATIO × rolling median.
+SHED_SPIKE_RATIO = 2.0
+
 
 class RollingMedian:
-    """Median over a bounded trailing window of pushed values."""
+    """Median over a bounded trailing window of pushed values.
+
+    An empty window is **NaN**, not 0.0: the old zero default rendered a
+    `drift_med 0.0` — the exact stability boundary — before any record
+    arrived, indistinguishable from a genuinely zero-drift stream.  NaN
+    propagates through comparisons as False, so alert thresholds skip
+    empty windows for free, and the renderer shows ``—``."""
 
     def __init__(self, window: int = 8):
         self._buf: deque = deque(maxlen=max(int(window), 1))
@@ -39,7 +55,7 @@ class RollingMedian:
 
     @property
     def value(self) -> float:
-        return median(self._buf) if self._buf else 0.0
+        return median(self._buf) if self._buf else math.nan
 
     def __len__(self) -> int:
         return len(self._buf)
@@ -48,8 +64,14 @@ class RollingMedian:
 def _roll(records: List[dict], field: str, window: int) -> float:
     rm = RollingMedian(window)
     for rec in records[-window:]:
-        rm.push(rec[field])
+        if field in rec:
+            rm.push(rec[field])
     return rm.value
+
+
+def _fmt(x: float, spec: str = ".3f") -> str:
+    """Format a rolling value; an empty (NaN) window renders as ``—``."""
+    return "—" if math.isnan(x) else format(x, spec)
 
 
 def _fmt_verdicts(counts: dict) -> str:
@@ -58,35 +80,52 @@ def _fmt_verdicts(counts: dict) -> str:
 
 def _render_fleet(recs: List[dict], window: int) -> str:
     last = recs[-1]
+    drift = _roll(recs, "drift_med", window)
+    # Alert: a *populated* window whose median drift crosses into >= 0
+    # (the paper's instability boundary).  NaN (empty window) compares
+    # False, so the alert can never fire off the missing-data default.
+    alert = "  !! drift>=0" if drift >= 0.0 else ""
     return (f"fleet   g{last['group']}  chunk {last['chunk']:>4}  "
             f"t={last['t']:>8}  sims={last['n_sims']:>4} | "
-            f"useful ~{_roll(recs, 'useful_rate_med', window):.3f}  "
-            f"backlog ~{_roll(recs, 'backlog_med', window):.1f}  "
+            f"useful ~{_fmt(_roll(recs, 'useful_rate_med', window))}  "
+            f"backlog ~{_fmt(_roll(recs, 'backlog_med', window), '.1f')}  "
+            f"drift ~{_fmt(drift)}  "
             f"max_q {last['max_queue_med']:.1f}  "
             f"decided {last['n_decided']}/{last['n_sims']}  "
-            f"[{_fmt_verdicts(last['verdicts'])}]")
+            f"[{_fmt_verdicts(last['verdicts'])}]" + alert)
 
 
 def _render_serving(recs: List[dict], window: int) -> str:
     last = recs[-1]
+    shed = _roll(recs, "shed_frac_med", window)
+    # Alert: the latest shed fraction spikes to SHED_SPIKE_RATIO × the
+    # rolling median, above the noise floor.  Requires a populated window
+    # (NaN median → both comparisons False → no alert).
+    shed_last = float(last["shed_frac_med"])
+    alert = ("  !! shed spike"
+             if shed_last > SHED_SPIKE_FLOOR
+             and shed_last > SHED_SPIKE_RATIO * shed else "")
     return (f"serving g{last['group']}  chunk {last['chunk']:>4}  "
             f"t={last['t']:>8}  sims={last['n_sims']:>4} | "
-            f"qps ~{_roll(recs, 'qps_med', window):.2f}  "
-            f"shed ~{_roll(recs, 'shed_frac_med', window):.3f}  "
-            f"p99 ~{_roll(recs, 'p99_med', window):.0f}  "
+            f"qps ~{_fmt(_roll(recs, 'qps_med', window), '.2f')}  "
+            f"shed ~{_fmt(shed)}  "
+            f"p99 ~{_fmt(_roll(recs, 'p99_med', window), '.0f')}  "
             f"gate {last['gate_open_frac']:.2f}  "
-            f"[{_fmt_verdicts(last['verdicts'])}]")
+            f"[{_fmt_verdicts(last['verdicts'])}]" + alert)
 
 
 def _render_atlas(recs: List[dict], window: int) -> List[str]:
     last = recs[-1]
     n_cells = last["n_active_cells"] + last["n_done_cells"]
-    lines = [(f"atlas   g{last['group']}  launch {last['chunk']:>4}  "
+    requeues = (f"  requeues {last['n_requeues']}"
+                if last.get("n_requeues") else "")
+    lines = [(f"atlas   g{last['group']}/b{last.get('bucket', 0)}  "
+              f"launch {last['chunk']:>4}  "
               f"t={last['t']:>8}  lanes={last['n_sims']:>4} | "
               f"done {last['n_done_cells']}/{n_cells} cells  "
               f"probes {last['n_probes']}  "
-              f"bracket ~{_roll(recs, 'bracket_rel_width_med', window):.3f} "
-              f"of bound")]
+              f"bracket ~{_fmt(_roll(recs, 'bracket_rel_width_med', window))} "
+              f"of bound" + requeues)]
     for fam, row in sorted(last["families"].items()):
         bar = "#" * int(10 * row["done"] / max(row["cells"], 1))
         lines.append(f"    {fam:<18} {row['done']}/{row['cells']} done "

@@ -33,7 +33,10 @@ from typing import Dict, Iterable, List
 #: Bump when any field table below changes shape, and bless the new
 #: digest in BLESSED_DIGESTS (scripts/check_stream.py enforces the pair).
 #: v2: added the "resume" record kind (preemption-safe runs, DESIGN.md §12).
-SCHEMA_VERSION = 2
+#: v3: atlas records gained "bucket" (the PadDims size bucket the launch
+#:     unit runs in) and "n_requeues" (adaptive-horizon escalations so
+#:     far) — the bucketed-atlas observability contract (DESIGN.md §13).
+SCHEMA_VERSION = 3
 
 # Field type tags: "int" (json integer, bools rejected), "num" (integer or
 # float), "str", "dict" (nested object; contents are kind-specific and
@@ -75,6 +78,8 @@ STREAM_KINDS: Dict[str, Dict[str, str]] = {
     # atlas: host-side bisection progress, one record per group launch.
     "atlas": {
         **_COMMON,
+        "bucket": "int",            # PadDims size bucket of this launch unit
+        "n_requeues": "int",        # adaptive-horizon re-queues so far
         "n_active_cells": "int",    # cells still bisecting after this launch
         "n_done_cells": "int",      # cells with a finished search
         "n_probes": "int",          # rate probes harvested so far
@@ -109,6 +114,7 @@ def schema_digest() -> str:
 BLESSED_DIGESTS: Dict[int, str] = {
     1: "cf81d7426080f2ac1b8123bcc45435a10196008787131209b3b24dcf181ba29c",
     2: "920d91e8d051be592b6a3478ceb752d7c0dd8cf840d6b5050bec7b820caef97e",
+    3: "6b075e07750232b47eab5e3fb39a487ed0d1491a469b7aedcf7ab412e66f2398",
 }
 
 

@@ -11,10 +11,15 @@ try:        # property tests widen coverage when hypothesis exists;
 except ImportError:                   # the deterministic grid always runs
     HAVE_HYPOTHESIS = False
 
+import dataclasses
+
 import numpy as np
 
-from repro.fleet import (AtlasJob, Bisection, FleetJob, atlas_table,
-                         find_lambda_max, run_fleet, sweep_lambda_max)
+from repro.fleet import (AtlasJob, Bisection, FleetJob, PadDims,
+                         atlas_table, find_lambda_max, get_scenario,
+                         make_buckets, pad_problem, policy_surface_table,
+                         problem_shape, run_fleet, sweep_lambda_max,
+                         sweep_policy_surface, validate_buckets)
 
 # ---------------------------------------------------------------------------
 # The pure bisection machine (satellite: in-place probe-rewrite properties)
@@ -339,3 +344,260 @@ class TestMixedRateEarlyStopRegression:
         for i in (0, 2):
             assert a.metrics[i]["decided_at_slot"] == \
                 b.metrics[i]["decided_at_slot"]
+
+
+# ---------------------------------------------------------------------------
+# Size bucketing (DESIGN.md §13): pure partition properties + validation
+# ---------------------------------------------------------------------------
+
+class TestBucketing:
+    MIXED = [get_scenario(s).build(0)
+             for s in ("ring", "tree", "paper_grid", "expander")]
+
+    def test_single_bucket_is_the_global_hull(self):
+        dims, assignment = make_buckets(self.MIXED, n_buckets=1)
+        assert dims == [PadDims.of(self.MIXED)]
+        assert assignment == [0] * len(self.MIXED)
+
+    def test_two_buckets_cover_and_shrink(self):
+        dims, assignment = make_buckets(self.MIXED, n_buckets=2)
+        assert len(dims) == 2
+        hull = PadDims.of(self.MIXED)
+        for p, b in zip(self.MIXED, assignment):
+            assert dims[b].fits(p)
+        # the small bucket must actually be smaller than the hull on the
+        # dominant (edge) axis — the whole point of bucketing
+        assert min(d.n_edges for d in dims) < hull.n_edges
+        # buckets are ordered by size: bucket 0 never exceeds bucket 1
+        assert dims[0].n_edges <= dims[1].n_edges
+
+    def test_identical_shapes_share_a_bucket(self):
+        probs = [get_scenario("ring").build(ts) for ts in (0, 1, 2)]
+        probs += [get_scenario("expander").build(0)]
+        _, assignment = make_buckets(probs, n_buckets=3)
+        assert len(set(assignment[:3])) == 1      # all rings together
+
+    def test_more_buckets_than_shapes_drops_empties(self):
+        probs = [get_scenario("ring").build(0),
+                 get_scenario("expander").build(0)]
+        dims, assignment = make_buckets(probs, n_buckets=5)
+        assert len(dims) == len(set(assignment)) == 2
+
+    def test_empty_problem_list_raises_clearly(self):
+        with pytest.raises(ValueError, match="empty problem sequence"):
+            PadDims.of([])
+        with pytest.raises(ValueError, match="empty problem sequence"):
+            make_buckets([])
+
+    def test_pad_problem_overflow_names_shapes(self):
+        big = get_scenario("expander").build(0)
+        small = PadDims.of([get_scenario("ring").build(0)])
+        with pytest.raises(ValueError, match=r"exceeds pad dims"):
+            pad_problem(big, small)
+
+    def test_validate_buckets_actionable_errors(self):
+        probs = self.MIXED[:2]
+        dims = [PadDims.of(probs)]
+        with pytest.raises(ValueError, match="bucket assignments"):
+            validate_buckets(probs, dims, [0])
+        with pytest.raises(ValueError, match="only 1 buckets exist"):
+            validate_buckets(probs, dims, [0, 3])
+        tiny = PadDims(n_nodes=2, n_edges=1, n_comp=1)
+        with pytest.raises(ValueError, match=r"exceeds bucket 0 dims"):
+            validate_buckets(probs, [tiny], [0, 0])
+
+
+# ---------------------------------------------------------------------------
+# Bucketed atlas: bit-equality to the single-bucket path at bucket dims
+# ---------------------------------------------------------------------------
+
+@pytest.mark.fleet_smoke
+class TestBucketedEquivalence:
+    @pytest.fixture(scope="class")
+    def bucketed(self):
+        return sweep_lambda_max(MINI_CELLS, n_buckets=2, **MINI_KW)
+
+    def test_two_buckets_two_programs_one_group(self, bucketed):
+        res = bucketed
+        assert res.n_buckets == 2
+        # one policy group x 2 buckets: one launch unit (and one compiled
+        # step trace) per bucket, counted once per group
+        assert res.n_programs == 2
+        assert res.n_step_compiles == 2
+        assert sum(res.bucket_cells.values()) == res.n_cells
+        assert sum(res.bucket_launches.values()) == res.n_launches
+        assert all(n > 0 for n in res.bucket_launches.values())
+        # result.dims is the hull of the bucket dims
+        assert res.dims == PadDims(
+            n_nodes=max(d.n_nodes for d in res.bucket_dims),
+            n_edges=max(d.n_edges for d in res.bucket_dims),
+            n_comp=max(d.n_comp for d in res.bucket_dims))
+
+    def test_rows_bit_identical_to_single_bucket_at_bucket_dims(
+            self, bucketed):
+        """Per-cell searches must not notice bucketing: every row equals
+        the row the single-bucket sweep produces when forced (via explicit
+        ``dims``) to the cell's bucket dims."""
+        res = bucketed
+        by_cell = {(r.scenario, r.topo_seed): r for r in res.rows}
+        for b, bdims in enumerate(res.bucket_dims):
+            cells_b = [c for c in MINI_CELLS
+                       if by_cell[(c.scenario, c.topo_seed)].bucket == b]
+            assert cells_b, f"bucket {b} has no cells"
+            single = sweep_lambda_max(cells_b, dims=bdims, **MINI_KW)
+            for row in single.rows:
+                got = by_cell[(row.scenario, row.topo_seed)]
+                assert dataclasses.replace(got, bucket=0) == row, (
+                    f"{row.scenario}: bucketed != single-bucket at "
+                    f"bucket {b} dims")
+
+    def test_cells_assigned_to_fitting_buckets(self, bucketed):
+        res = bucketed
+        for r in res.rows:
+            shape = problem_shape(get_scenario(r.scenario).build(r.topo_seed))
+            d = res.bucket_dims[r.bucket]
+            assert shape <= (d.n_nodes, d.n_edges, d.n_comp) or \
+                d.fits(get_scenario(r.scenario).build(r.topo_seed))
+
+
+# ---------------------------------------------------------------------------
+# Adaptive horizons: UNDECIDED-at-top cells re-queue instead of collapsing
+# ---------------------------------------------------------------------------
+
+@pytest.mark.fleet_smoke
+class TestAdaptiveRequeue:
+    # T=512/chunk=256 can never latch a verdict (first possible latch is
+    # 1280 slots), so every fixed-horizon probe is UNDECIDED and the
+    # bracket collapses to lam_max = 0 — the bug the re-queue fixes.
+    CELLS = [AtlasJob("paper_grid", eps_b=0.05)]
+    KW = dict(seeds=(0,), T=512, chunk=256, rel_tol=0.1, max_calls=6)
+
+    def test_fixed_horizon_collapses(self):
+        res = sweep_lambda_max(self.CELLS, **self.KW)
+        row = res.rows[0]
+        assert row.lam_max == 0.0 and row.undecided
+        assert res.n_requeues == 0 and row.n_requeues == 0
+
+    def test_requeue_recovers_a_real_bracket(self):
+        """With max_requeues=2 the cell restarts at 2xT (1024 slots —
+        still short of the 1280-slot latch) and then 4xT (2048 slots),
+        where verdicts latch and the search localizes a genuine
+        bracket: zero silently-collapsed cells."""
+        res = sweep_lambda_max(self.CELLS, max_requeues=2, **self.KW)
+        row = res.rows[0]
+        assert res.n_requeues == 2 and row.n_requeues == 2
+        assert row.lam_max > 0.0, "re-queued cell still collapsed"
+        assert row.hi > row.lo > 0.0
+        # A 2048-slot horizon localizes conservatively (the bench runs
+        # far longer); the point here is a real bracket, not precision.
+        assert row.lam_max >= 0.6 * row.bound_exact
+        # honest reporting either way: decided, or widened with evidence
+        if row.undecided:
+            assert row.hi_certain is not None
+        # probe streams are decoupled per attempt: call_index == attempt
+        attempts = {p.call_index for p in row.probes}
+        assert attempts == {0, 1, 2}
+        # first-attempt probes are the fixed-horizon probes, bit-equal
+        fixed = sweep_lambda_max(self.CELLS, **self.KW).rows[0]
+        first = tuple(p for p in row.probes if p.call_index == 0)
+        assert first == fixed.probes
+
+    def test_budget_cap_reports_honestly(self):
+        """One escalation (1024 slots) still cannot latch: the budget-
+        capped cell must report the collapse with its attempt count, not
+        pretend it converged."""
+        res = sweep_lambda_max(self.CELLS, max_requeues=1, **self.KW)
+        row = res.rows[0]
+        assert res.n_requeues == 1 and row.n_requeues == 1
+        assert row.undecided and row.lam_max == 0.0
+
+    def test_certain_collapse_requeues_too(self):
+        """A bracket that collapses with *proven*-UNSTABLE evidence (not
+        UNDECIDED) must also burn the re-queue ladder.  At rates far
+        below capacity the backpressure gradient fills so slowly that
+        the whole horizon sits inside the transient and the drift + gap
+        tests latch a *false* UNSTABLE — paper_grid topo_seed 8 / seed 1
+        at T=4096 reads proven-UNSTABLE at 0.1x its own exact bound and
+        collapses with certainty (hi_certain populated, not UNDECIDED).
+        One 2xT rung must repair it: the fresh attempt's top-of-bracket
+        probe decides STABLE on the longer run and the search ascends
+        to the true bound instead of reporting 0."""
+        cells = [AtlasJob("paper_grid", topo_seed=8, eps_b=0.05)]
+        kw = dict(seeds=(1,), T=4096, chunk=512, rel_tol=0.1, max_calls=8)
+        base = sweep_lambda_max(cells, **kw).rows[0]
+        # the bug: a false-certain collapse — no UNDECIDED escape hatch
+        assert base.lam_max == 0.0 and not base.undecided
+        assert base.hi_certain is not None
+        res = sweep_lambda_max(cells, max_requeues=1, **kw)
+        row = res.rows[0]
+        assert res.n_requeues == 1 and row.n_requeues == 1
+        # the rung disambiguates transient from instability: full repair
+        assert row.lam_max == pytest.approx(row.bound_exact)
+        # both attempts ran, with decoupled fold_seed streams
+        assert {p.call_index for p in row.probes} == {0, 1}
+        # first-attempt probes are the fixed-horizon probes, bit-equal
+        first = tuple(p for p in row.probes if p.call_index == 0)
+        assert first == base.probes
+
+
+# ---------------------------------------------------------------------------
+# Seed replication: rows and bands invariant to cell dispatch order
+# ---------------------------------------------------------------------------
+
+@pytest.mark.fleet_smoke
+class TestSeedBandsDeterminism:
+    CELLS = [AtlasJob("random_geometric", topo_seed=ts, eps_b=0.05)
+             for ts in (0, 1, 2)]
+    KW = dict(seeds=(0, 1), T=1536, chunk=256, rel_tol=0.2, max_calls=6,
+              n_buckets=2)
+
+    def test_bands_invariant_to_dispatch_order(self):
+        a = sweep_lambda_max(self.CELLS, **self.KW)
+        b = sweep_lambda_max(list(reversed(self.CELLS)), **self.KW)
+        rows_a = {(r.scenario, r.topo_seed): r for r in a.rows}
+        rows_b = {(r.scenario, r.topo_seed): r for r in b.rows}
+        assert rows_a == rows_b
+        ta, tb = atlas_table(a), atlas_table(b)
+        assert ta["families"] == tb["families"]
+        band = ta["families"]["random_geometric"]["band"]
+        assert band["q10"] <= band["q90"]
+        assert band["width"] == band["q90"] - band["q10"]
+        assert a.bucket_cells == b.bucket_cells
+
+    def test_atlas_table_reports_buckets_and_bands(self):
+        res = sweep_lambda_max(self.CELLS, **self.KW)
+        tbl = atlas_table(res)
+        assert tbl["n_buckets"] == res.n_buckets
+        assert len(tbl["bucket_dims"]) == res.n_buckets
+        assert tbl["n_requeues"] == res.n_requeues
+        fam = tbl["families"]["random_geometric"]
+        assert {"band", "n_requeued"} <= set(fam)
+        for cell in fam["cells"]:
+            assert {"bucket", "n_requeues"} <= set(cell)
+
+
+# ---------------------------------------------------------------------------
+# Atlas-over-policies: the policy-surface table
+# ---------------------------------------------------------------------------
+
+@pytest.mark.fleet_smoke
+class TestPolicySurface:
+    def test_surface_shares_grid_and_pivots(self):
+        res = sweep_policy_surface(
+            ["paper_grid"], [0], policies=("pi3", "pi3bar"), eps_b=0.05,
+            seeds=(0,), T=2048, chunk=256, rel_tol=0.2, max_calls=6)
+        assert res.n_cells == 2
+        policies = {r.policy for r in res.rows}
+        assert policies == {"pi3", "pi3bar"}
+        # both policies measured against the same exact bound per cell
+        bounds = {r.policy: r.bound_exact for r in res.rows}
+        assert bounds["pi3"] > 0 and bounds["pi3bar"] > 0
+        tbl = policy_surface_table(res)
+        assert set(tbl["policies"]) == policies
+        assert tbl["families"] == ["paper_grid"]
+        gaps = [tbl["policies"][p]["paper_grid"]["gap_vs_best"]
+                for p in policies]
+        assert min(gaps) == 0.0 and all(g >= 0.0 for g in gaps)
+        for p in policies:
+            row = tbl["policies"][p]["paper_grid"]
+            assert row["band"]["width"] >= 0.0

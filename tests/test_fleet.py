@@ -703,6 +703,50 @@ class TestExactBounds:
         assert info.misses == 3, info
         assert info.hits >= len(bounds), info
 
+    def test_fingerprint_dedupes_seed_independent_topologies(self):
+        """The cache keys on the canonical problem fingerprint, not
+        (scenario, topo_seed): every topo_seed of a seed-independent
+        family builds the same instance, so a thousand-seed atlas grid
+        costs *one* LP solve for it."""
+        from repro.fleet import problem_fingerprint
+        from repro.fleet.scenarios import get_scenario
+        fps = {problem_fingerprint(get_scenario("fat_tree").build(ts))
+               for ts in (0, 1, 2)}
+        assert len(fps) == 1
+        # ... while a genuinely seed-varying family hashes apart
+        fps_rg = {problem_fingerprint(
+            get_scenario("random_geometric").build(ts)) for ts in (0, 1)}
+        assert len(fps_rg) == 2
+        exact_lam_star.cache_clear()
+        for ts in range(4):
+            exact_lam_star("fat_tree", ts, 1.0)
+        info = exact_lam_star.cache_info()
+        assert info.misses == 1 and info.hits == 3, info
+        # rho0 is part of the fingerprint: a regulated solve is distinct
+        exact_lam_star("fat_tree", 0, 1.05)
+        assert exact_lam_star.cache_info().misses == 2
+
+    def test_lp_cache_is_bounded(self, monkeypatch):
+        """At thousands of topo_seeds the cache must evict, not grow:
+        with the bound pinned to 2, three distinct LPs leave exactly two
+        entries (LRU), and the evicted one re-solves on return."""
+        from repro.fleet import report as report_mod
+        exact_lam_star.cache_clear()
+        monkeypatch.setattr(report_mod, "LP_CACHE_MAX", 2)
+        for scen in ("paper_grid", "ring", "fat_tree"):
+            exact_lam_star(scen, 0, 1.0)
+        info = exact_lam_star.cache_info()
+        assert info.misses == 3 and info.currsize == 2
+        # paper_grid (least recently used) was evicted: a re-solve
+        exact_lam_star("paper_grid", 0, 1.0)
+        assert exact_lam_star.cache_info().misses == 4
+        # ring's entry survived?  No — it was evicted by the re-solve;
+        # fat_tree (most recent before it) still hits.
+        exact_lam_star("fat_tree", 0, 1.0)
+        assert exact_lam_star.cache_info().misses == 4
+        exact_lam_star.cache_clear()
+        assert exact_lam_star.cache_info() == (0, 0, 2, 0)
+
 
 # ---------------------------------------------------------------------------
 # rho0-adjusted bounds (report layer)

@@ -4,16 +4,20 @@ telemetry-off across fleet/serving/atlas, including early stop), the
 no-recompilation contract (the emit program must not fork the compiled
 chunk step), and the `capacity_report --follow` renderer."""
 import json
+import math
+from functools import partial
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import Mesh
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.fleet import (FleetJob, make_group_launch, make_stream_runner,
                          registry_cells, resolve_verdict, run_fleet,
                          sweep_lambda_max)
 from repro.obs import emitter as obs_emitter
+from repro.obs import follow as follow_mod
 from repro.obs import schema
 from repro.obs.follow import RollingMedian, follow, render
 from repro.serving import ServingJob, run_serving
@@ -206,6 +210,56 @@ class TestNoRecompilation:
 
 
 # ---------------------------------------------------------------------------
+# GPU-safe emit: probe leaves are copied before the donated launch lands
+# ---------------------------------------------------------------------------
+
+@pytest.mark.fleet_smoke
+class TestDonationSafeEmit:
+    def test_emit_operand_survives_donated_overwrite(self):
+        """The emit program must snapshot (`jnp.copy`) its leaves: after
+        dispatching emit on a buffer and immediately overwriting that
+        buffer through a donating jit, the callback must still observe
+        the pre-overwrite values.  (On CPU in-order execution masks the
+        race this guards against on GPU; the copy makes the contract
+        backend-independent.)"""
+        mesh = Mesh(np.array(jax.devices()), ("fleet",))
+        emit = obs_emitter._emit_fn(mesh)
+        seen = []
+        handle = next(obs_emitter._HANDLES)
+        obs_emitter._SINKS[handle] = lambda leaves: seen.append(
+            {k: np.asarray(v) for k, v in leaves.items()})
+        rep = NamedSharding(mesh, P())
+        try:
+            x = jax.device_put(jnp.arange(8, dtype=jnp.float32), rep)
+
+            @partial(jax.jit, donate_argnums=0)
+            def clobber(v):
+                return v * 0.0 - 1.0
+
+            emit(jax.device_put(jnp.int32(handle), rep), {"x": x})
+            x = clobber(x)              # donated: may reuse x's buffer
+            jax.block_until_ready(x)
+            jax.effects_barrier()
+        finally:
+            obs_emitter._SINKS.pop(handle, None)
+        assert len(seen) == 1
+        np.testing.assert_array_equal(seen[0]["x"],
+                                      np.arange(8, dtype=np.float32))
+
+    def test_fleet_stream_bit_identical_with_copy(self, tmp_path):
+        """End-to-end regression for the copy fix: telemetry-on metrics
+        and records stay bit-identical to telemetry-off (the observer-
+        effect contract survives the extra copy in the emit program)."""
+        jobs = [FleetJob(scenario="paper_grid", policy="pi3", lam=3.0,
+                         eps_b=0.0517, seed=s) for s in (0, 1)]
+        off = run_fleet(jobs, T=512, chunk=128)
+        on = run_fleet(jobs, T=512, chunk=128,
+                       stream_path=str(tmp_path / "c_stream.jsonl"))
+        _assert_metrics_identical(off.metrics, on.metrics)
+        assert schema.validate_stream(on.stream_records) == []
+
+
+# ---------------------------------------------------------------------------
 # The follow renderer (capacity_report)
 # ---------------------------------------------------------------------------
 
@@ -216,7 +270,42 @@ class TestFollow:
             rm.push(x)
         assert rm.value == 3.0          # 100.0 aged out of the window
         assert len(rm) == 3
-        assert RollingMedian(2).value == 0.0
+
+    def test_empty_window_is_nan_not_zero(self):
+        """Regression: an empty buffer used to report 0.0 — the exact
+        drift-alert boundary — before any record arrived.  It must be
+        NaN (renders as — and never trips a threshold)."""
+        rm = RollingMedian(2)
+        assert math.isnan(rm.value)
+        assert follow_mod._fmt(rm.value) == "—"
+        assert not (rm.value >= 0.0)     # NaN skips threshold checks
+        rm.push(0.25)
+        assert rm.value == 0.25
+
+    def test_fleet_drift_renders_and_alerts(self):
+        stable = [_fleet_rec(chunk=c, t=64 * (c + 1), drift_med=-0.2)
+                  for c in range(3)]
+        out = render(stable)
+        assert "drift ~-0.200" in out and "!!" not in out
+        crossing = [_fleet_rec(chunk=c, t=64 * (c + 1), drift_med=0.05)
+                    for c in range(3)]
+        assert "!! drift>=0" in render(crossing)
+
+    def test_serving_shed_spike_alert_skips_empty_window(self):
+        def srec(chunk, shed):
+            return schema.make_record(
+                "serving", group=0, chunk=chunk, t=64 * (chunk + 1),
+                n_sims=2, qps_med=2.0, admitted_qps_med=2.0,
+                shed_frac_med=shed, p99_med=40.0, gate_open_frac=1.0,
+                gate_flips=0, verdicts={"UNDECIDED": 2})
+        calm = [srec(c, 0.01) for c in range(4)]
+        assert "!! shed spike" not in render(calm)
+        spike = calm + [srec(4, 0.4)]
+        assert "!! shed spike" in render(spike)
+        # a lone high-shed record is its own window median: steady-state
+        # high shed is not a *spike* (and an empty window alerts never)
+        steady = [srec(c, 0.4) for c in range(4)]
+        assert "!! shed spike" not in render(steady)
 
     def test_render_fleet_and_bad_records(self):
         recs = [_fleet_rec(chunk=c, t=64 * (c + 1)) for c in range(3)]

@@ -425,3 +425,57 @@ class TestStreamResume:
              str(bare)], cwd=REPO, capture_output=True, text=True)
         assert r.returncode == 1
         assert "no resume record" in r.stderr
+
+
+# ---------------------------------------------------------------------------
+# Kill/resume through buckets and adaptive re-queues (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.fleet_smoke
+class TestBucketedRequeueResume:
+    """The PR-9 snapshot must carry the bucketed-atlas cursor: launch-unit
+    index (the bucket cursor), per-bucket launch counters, and per-cell
+    attempt counters — a kill mid-re-queue or mid-bucket resumes
+    bit-exactly."""
+
+    # paper_grid + ring land in different size buckets; T=512/chunk=256
+    # cannot latch, so every cell escalates through both re-queues —
+    # every boundary is either mid-bucket or mid-attempt.
+    CELLS = registry_cells(("paper_grid", "ring"), topo_seeds=(0,),
+                           eps_b=0.05)
+    KW = dict(seeds=(0,), T=512, chunk=256, rel_tol=0.1, max_calls=4,
+              n_buckets=2, max_requeues=2)
+
+    @pytest.fixture(scope="class")
+    def base(self, tmp_path_factory):
+        path = tmp_path_factory.mktemp("req") / "base_stream.jsonl"
+        res = sweep_lambda_max(self.CELLS, **self.KW,
+                               stream_path=str(path))
+        return res, path
+
+    def _kill_points(self, base_res):
+        n = base_res.n_launches
+        return sorted({1, 2, n // 2, n - 1, n})
+
+    def test_kill_mid_requeue_and_mid_bucket_bit_exact(self, base,
+                                                       tmp_path):
+        base_res, base_path = base
+        assert base_res.n_buckets == 2
+        assert base_res.n_requeues == 2 * len(self.CELLS)
+        for kill_at in self._kill_points(base_res):
+            ckpt = tmp_path / f"ckpt_{kill_at}"
+            stream = tmp_path / f"stream_{kill_at}.jsonl"
+            res = _kill_and_resume(
+                lambda **kw: sweep_lambda_max(self.CELLS, **self.KW, **kw),
+                kill_at, ckpt, stream)
+            assert res.rows == base_res.rows, f"kill_at={kill_at}"
+            assert res.n_requeues == base_res.n_requeues
+            assert res.bucket_launches == base_res.bucket_launches
+            assert res.bucket_cells == base_res.bucket_cells
+            assert res.n_launches == base_res.n_launches
+            assert res.resumed_from == kill_at
+            # attempt counters survived: per-row re-queue counts intact
+            assert [r.n_requeues for r in res.rows] == \
+                [r.n_requeues for r in base_res.rows]
+            seams = _stream_equal(base_path, stream)
+            assert seams[0]["engine"] == "atlas"
